@@ -1,0 +1,39 @@
+"""Benchmark driver. Prints ``name,us_per_call,derived[,paper]`` CSV.
+
+Sections:
+  * paper_figs  - one benchmark per CoMeFa paper table/figure (Figs 8-12,
+                  Tables III/IV), driven by the analytical FPGA model.
+  * comefa_sim  - wall-time of the bit-level simulator on representative
+                  programs (throughput of the functional model itself).
+  * tpu_kernels - bit-plane TPU kernel benchmarks (CPU wall-time of the
+                  jnp reference path + Pallas interpret-mode correctness;
+                  roofline numbers come from launch/dryrun.py instead).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows: list = []   # (name, us_per_call, derived, paper)
+    from benchmarks import paper_figs
+    paper_figs.run(rows)
+    try:
+        from benchmarks import sim_speed
+        sim_speed.run(rows)
+    except Exception as e:  # pragma: no cover
+        print(f"# sim_speed skipped: {e}", file=sys.stderr)
+    try:
+        from benchmarks import tpu_kernels
+        tpu_kernels.run(rows)
+    except Exception as e:  # pragma: no cover
+        print(f"# tpu_kernels skipped: {e}", file=sys.stderr)
+
+    print("name,us_per_call,derived,paper")
+    for name, us, derived, paper in rows:
+        p = "" if paper is None else f"{paper:.6g}"
+        print(f"{name},{us:.2f},{derived:.6g},{p}")
+
+
+if __name__ == "__main__":
+    main()

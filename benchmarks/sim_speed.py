@@ -1,0 +1,44 @@
+"""Wall-time benchmarks of the bit-level CoMeFa simulator itself."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.comefa import ComefaArray, layout, program, timing
+
+
+def _bench(fn, *, reps=3):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(rows: list) -> None:
+    rng = np.random.default_rng(0)
+
+    arr = ComefaArray(n_blocks=8)
+    n = 8
+    a = rng.integers(0, 1 << n, size=(8, 160))
+    b = rng.integers(0, 1 << n, size=(8, 160))
+    layout.place(arr, a, 0, n)
+    layout.place(arr, b, n, n)
+    prog_mul = program.mul(list(range(n)), list(range(n, 2 * n)),
+                           list(range(2 * n, 4 * n)))
+
+    us = _bench(lambda: arr.run(prog_mul))
+    lanes = 8 * 160
+    rows.append(("sim/mul8_us_per_program", us, us, None))
+    rows.append(("sim/mul8_results_per_s", us, lanes / (us / 1e6), None))
+    rows.append(("sim/mul8_cycles", 0.0, timing.mul_cycles(n), None))
+
+    prog_add = program.add(list(range(n)), list(range(n, 2 * n)),
+                           list(range(2 * n, 3 * n + 1)))
+    us = _bench(lambda: arr.run(prog_add))
+    rows.append(("sim/add8_us_per_program", us, us, None))
+
+    # modelled CoMeFa-D hardware time for the same program, for scale
+    hw_us = timing.mul_cycles(n) / 588e6 * 1e6
+    rows.append(("sim/mul8_hw_us_comefa_d", 0.0, hw_us, None))

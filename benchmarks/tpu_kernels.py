@@ -1,0 +1,80 @@
+"""TPU bit-plane kernel benchmarks (beyond-paper track).
+
+On this CPU container the Pallas kernels run in interpret mode, so the
+meaningful numbers are (a) correctness deltas vs the jnp oracle and (b)
+the *derived* memory-traffic ratios that set decode-roofline wins (weight
+bytes 16/w x smaller) - wall-clock MFU comes from launch/roofline.py.
+CPU wall-times of the XLA (jnp) bit-plane path are reported for scale.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.quant import bitplane as bp
+
+
+def _timeit(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(rows: list) -> None:
+    rng = np.random.default_rng(0)
+    m, k, n = 8, 1024, 512
+
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    dense = np.asarray(x @ w)
+
+    for bits in (2, 4, 8):
+        packed, scale = bp.quantize_pack(w, bits, axis=0)
+        y_ref = ref.bitplane_matmul_ref(x, packed, scale, bits=bits)
+        y_k = ops.bitplane_matmul(x, packed, scale, bits=bits,
+                                  block_k=256)
+        kernel_err = float(jnp.abs(y_k - y_ref).max())
+        quant_rel = float(np.linalg.norm(np.asarray(y_ref) - dense)
+                          / np.linalg.norm(dense))
+        rows.append((f"tpu/bitplane_w{bits}/kernel_vs_ref_maxerr", 0.0,
+                     kernel_err, None))
+        rows.append((f"tpu/bitplane_w{bits}/quant_rel_err", 0.0,
+                     quant_rel, None))
+        # weight HBM bytes: the roofline lever for decode
+        dense_bytes = k * n * 2                      # bf16
+        packed_bytes = bits * (k // 32) * n * 4 + n * 4
+        rows.append((f"tpu/bitplane_w{bits}/weight_bytes_ratio", 0.0,
+                     dense_bytes / packed_bytes, None))
+        # XLA-path wall time on CPU (the lowering the dry-run uses)
+        q = bp.unpack(packed, bits, axis=0)
+
+        def xla_path(packed=packed, scale=scale, bits=bits):
+            qq = bp.unpack(packed, bits, axis=0)
+            return x @ (qq.astype(jnp.float32) * scale)
+        us = _timeit(jax.jit(xla_path))
+        rows.append((f"tpu/bitplane_w{bits}/xla_path_us", us, us, None))
+
+    # bulk bitwise: records/second through the packed search kernel
+    bits_s, n_rec = 16, 32 * 512 * 4
+    recs = rng.integers(0, 1 << bits_s, size=n_rec)
+    packed_s = jnp.asarray(ref.bit_transpose_ref(recs, bits_s))
+    key = int(recs[7])
+
+    def search():
+        return ops.search_replace(packed_s, bits=bits_s, key=key)[0]
+    us = _timeit(search)
+    rows.append(("tpu/search/us_per_call", us, us, None))
+    rows.append(("tpu/search/records_per_s", us, n_rec / (us / 1e6), None))
+
+    # reduction
+    vals = rng.integers(-8, 8, size=32 * 512)
+    packed_r = bp.pack(jnp.asarray(vals, jnp.int32), 4, axis=0)
+    got = float(ops.bitserial_reduce(packed_r, bits=4))
+    rows.append(("tpu/reduce4/exact", 0.0,
+                 1.0 if got == float(vals.sum()) else 0.0, 1.0))

@@ -1,0 +1,109 @@
+"""Run the paper's six benchmark kernels on the bit-level CoMeFa simulator
+and price them with the analytical FPGA model.
+
+Run:  PYTHONPATH=src python examples/comefa_programs.py
+"""
+import numpy as np
+
+from repro.core.comefa import ComefaArray, layout, program, timing
+from repro.core.fpga_model import perf
+
+rng = np.random.default_rng(0)
+F_D = 588e6
+
+
+def header(s):
+    print(f"\n=== {s} ===")
+
+
+def gemv_ooor():
+    header("GEMV via OOOR dot product (weights pinned, vector streamed)")
+    arr = ComefaArray(n_blocks=4)
+    k, wb, accb = 8, 8, 27
+    w = rng.integers(0, 1 << wb, size=(k, 160))
+    x = rng.integers(0, 1 << wb, size=k)
+    rows = []
+    for j in range(k):
+        layout.place(arr, np.tile(w[j], (4, 1)), j * wb, wb)
+        rows.append(list(range(j * wb, (j + 1) * wb)))
+    acc = list(range(k * wb, k * wb + accb))
+    cyc = arr.run(program.ooor_dot(rows, list(x), wb, acc))
+    got = layout.extract(arr, k * wb, accb, block=0)
+    expect = (w * x[:, None]).sum(0)
+    assert np.array_equal(got, expect)
+    print(f"  4 blocks x 160 lanes, k={k}: {cyc} cycles "
+          f"({cyc / F_D * 1e6:.1f} us @588MHz) - "
+          f"{4 * 160 * k / cyc:.1f} MACs/cycle")
+
+
+def search():
+    header("Database search + replace (bulk bitwise)")
+    arr = ComefaArray()
+    n = 16
+    recs = rng.integers(0, 1 << n, size=160)
+    key = int(recs[42])
+    layout.place(arr, recs, 0, n)
+    cyc = arr.run(program.search_replace(list(range(n)), key, n,
+                                         list(range(n, 2 * n))))
+    got = layout.extract(arr, 0, n, block=0)
+    assert np.array_equal(got, np.where(recs == key, 0, recs))
+    print(f"  160 records matched+cleared in {cyc} cycles "
+          f"(= {timing.search_cycles(n)} model)")
+
+
+def raid():
+    header("RAID rebuild (untransposed XOR fold)")
+    arr = ComefaArray()
+    drives = rng.integers(0, 2, size=(4, 160)).astype(np.uint8)
+    parity = np.bitwise_xor.reduce(drives, 0)
+    for d in range(3):                      # drive 3 lost
+        arr.mem[0, d] = drives[d]
+    arr.mem[0, 10] = parity
+    cyc = arr.run(program.raid_rebuild([[0], [1], [2]], [10], [20]))
+    assert np.array_equal(arr.mem[0, 20], drives[3])
+    print(f"  one 160-bit stripe row rebuilt per {cyc} cycles")
+
+
+def reduction():
+    header("In-RAM reduction tree")
+    arr = ComefaArray()
+    n, steps = 8, 2
+    vals = rng.integers(0, 1 << n, size=160)
+    layout.place(arr, vals, 0, n)
+    rows = list(range(0, n + steps + 1))
+    scratch = list(range(n + steps + 1, 2 * (n + steps) + 2))
+    cyc = arr.run(program.reduce_tree(rows, scratch, n, steps))
+    got = layout.extract(arr, 0, n + steps, block=0)
+    assert np.array_equal(got[::4], vals.reshape(-1, 4).sum(1))
+    print(f"  160 -> 40 partial sums in {cyc} cycles "
+          f"(= {timing.reduction_cycles(n, steps=steps)} model)")
+
+
+def fp_eltwise():
+    header("Elementwise HFP8 multiply (floating point in-RAM)")
+    arr = ComefaArray()
+    E, M = 4, 3
+    cycles = timing.fp_mul_cycles(E, M)
+    print(f"  HFP8 (e4m3) multiply: {cycles} cycles/lane-batch "
+          f"(paper formula M^2+7M+3E+5)")
+    print(f"  see tests/test_comefa_sim.py::test_fp_mul_bit_exact_vs_oracle")
+
+
+def speedups():
+    header("Analytical speedups (paper Fig 9)")
+    for bench, targets in perf.PAPER_SPEEDUPS.items():
+        got = {v: round(perf.BENCHES.get(bench.split('_')[0],
+                                         perf.eltwise)(v).speedup, 2)
+               if bench != "eltwise_nolimit" else
+               round(perf.eltwise(v, dram_limited=False).speedup, 2)
+               for v in targets}
+        print(f"  {bench:16s} model={got}")
+
+
+if __name__ == "__main__":
+    gemv_ooor()
+    search()
+    raid()
+    reduction()
+    fp_eltwise()
+    speedups()

@@ -1,0 +1,3 @@
+"""CoMeFa reproduction: bit-serial compute-in-memory, from the bit-level
+FPGA simulator up to a multi-pod JAX training/serving framework with
+bit-plane TPU kernels."""

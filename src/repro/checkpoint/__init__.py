@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing."""
+from .manager import CheckpointManager

@@ -1,0 +1,2 @@
+"""Faithful-reproduction track: CoMeFa simulator + analytical FPGA model."""
+from . import comefa, fpga_model

@@ -1,0 +1,9 @@
+"""CoMeFa compute-in-memory RAM: ISA, bit-level simulator, programs, timing."""
+from . import isa, layout, program, timing
+from .block import ComefaArray, ROW_ONES, ROW_ZEROS
+from .isa import Instr, N_COLS, N_ROWS, WORD_BITS
+
+__all__ = [
+    "isa", "layout", "program", "timing", "ComefaArray", "Instr",
+    "N_COLS", "N_ROWS", "WORD_BITS", "ROW_ONES", "ROW_ZEROS",
+]

@@ -1,0 +1,196 @@
+"""Bit-level functional model of CoMeFa RAM blocks (paper Figs. 1-4).
+
+Models the CoMeFa-D datapath exactly: each "cycle" reads one row per port
+(true dual-port), evaluates the PE (TR truth-table mux, X xor gate, CGEN
+carry gates, carry latch C, mask latch M, predication mux P, write muxes
+W1/W2) in all 160 columns, and writes one row back.  CoMeFa-A is
+functionally identical (same ISA, same per-extended-cycle parallelism of
+160 lanes); it differs only in clock period and area, which the timing /
+area models capture (`timing.py`, `fpga_model/area.py`).
+
+The engine is vectorized over *blocks*: `mem` has shape
+``[n_blocks, 128, 160]`` (uint8 bit per cell) and every block executes the
+same instruction each cycle - exactly how the paper drives many CoMeFa RAMs
+from one shared instruction-generation FSM (Sec. III-D).  Left/right shift
+chaining between adjacent blocks (Sec. III-F, Fig 6b) is modelled by
+treating the blocks of one array as one 160*n_blocks-lane row when
+``chain=True``.
+
+Semantics fixed here (paper leaves them implicit):
+  * predication (mux P) sees the *latched* values of mask/carry from the
+    previous cycle - "the carry ... can be used in the following cycle's
+    computation";
+  * the carry latch input is CGEN(A, B, c_in) = A&B | c_in&(A^B) with
+    c_in = 0 when c_rst else the latched carry; c_en=0 holds the old value.
+    c_rst gates the carry *input* path (making gate X transparent, as the
+    paper describes) without destroying the latched value - predication can
+    therefore still see a previously stored carry;
+  * W2's "carry" source is the latched (pre-update) carry, so an add's
+    final carry-out is stored by a following instruction with c_en=0;
+  * one write per cycle (either port's write path), to `dst_row`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .isa import (COL_MUX, N_COLS, N_ROWS, WORD_BITS, Instr, encode_program)
+
+# field indices in the encoded program matrix
+_F = {name: i for i, name in enumerate(isa.FIELD_NAMES)}
+
+# Reserved constant rows, initialised by `ComefaArray.reset()` and used by
+# program generators (e.g. carry presetting for subtraction).
+ROW_ONES = N_ROWS - 1   # row 127: all ones
+ROW_ZEROS = N_ROWS - 2  # row 126: all zeros
+
+
+def _step(chain: bool, state, fields):
+    """One CoMeFa cycle. state = (mem[nb,R,C], carry[nb,C], mask[nb,C])."""
+    mem, carry, mask = state
+    nb = mem.shape[0]
+
+    src1 = fields[_F["src1_row"]]
+    src2 = fields[_F["src2_row"]]
+    dst = fields[_F["dst_row"]]
+    tt = fields[_F["truth_table"]]
+    pred_sel = fields[_F["pred_sel"]]
+    w1_sel = fields[_F["w1_sel"]]
+    w2_sel = fields[_F["w2_sel"]]
+    wp1 = fields[_F["wp1_en"]]
+    wp2 = fields[_F["wp2_en"]]
+    c_en = fields[_F["c_en"]]
+    c_rst = fields[_F["c_rst"]]
+    m_en = fields[_F["m_en"]]
+    ext_bit = fields[_F["ext_bit"]]
+    b_ext = fields[_F["b_ext"]]
+
+    # ---- phase 1: read (one row per port) -------------------------------
+    a = jnp.take(mem, src1, axis=1)                      # [nb, C]
+    b_read = jnp.take(mem, src2, axis=1)
+    b = jnp.where(b_ext == 1, jnp.full_like(b_read, ext_bit), b_read)
+
+    # ---- phase 2: compute ----------------------------------------------
+    idx = (a << 1) | b                                   # (A<<1)|B in 0..3
+    tr = (tt >> idx) & 1                                 # mux TR
+    c_in = jnp.where(c_rst == 1, jnp.zeros_like(carry), carry)
+    s = tr ^ c_in                                        # gate X
+    cgen = (a & b) | (c_in & (a ^ b))                    # CGEN
+    carry_next = jnp.where(c_en == 1, cgen, carry)
+    mask_next = jnp.where(m_en == 1, tr, mask)
+
+    # predication uses the *latched* (previous-cycle) mask / carry
+    pred = jnp.select(
+        [pred_sel == isa.PRED_ALWAYS, pred_sel == isa.PRED_MASK,
+         pred_sel == isa.PRED_CARRY, pred_sel == isa.PRED_NOT_CARRY],
+        [jnp.ones_like(mask), mask, carry, 1 - carry])
+
+    # ---- phase 3: write-back -------------------------------------------
+    # neighbour S values for shifts; chain=True threads corner PEs of
+    # adjacent blocks together (RAM-to-RAM chaining, Fig 6b).
+    if chain:
+        s_flat = s.reshape(-1)
+        from_right = jnp.concatenate([s_flat[1:], jnp.zeros((1,), s.dtype)])
+        from_left = jnp.concatenate([jnp.zeros((1,), s.dtype), s_flat[:-1]])
+        from_right = from_right.reshape(s.shape)
+        from_left = from_left.reshape(s.shape)
+    else:
+        zcol = jnp.zeros((nb, 1), s.dtype)
+        from_right = jnp.concatenate([s[:, 1:], zcol], axis=1)
+        from_left = jnp.concatenate([zcol, s[:, :-1]], axis=1)
+
+    val1 = jnp.select(
+        [w1_sel == isa.W1_S, w1_sel == isa.W1_DIN, w1_sel == isa.W1_RIGHT],
+        [s, jnp.zeros_like(s), from_right])             # d_in handled off-line
+    val2 = jnp.select(
+        [w2_sel == isa.W2_CARRY, w2_sel == isa.W2_DIN, w2_sel == isa.W2_LEFT],
+        [c_in, jnp.zeros_like(s), from_left])
+
+    old_row = jnp.take(mem, dst, axis=1)
+    we1 = (pred & wp1).astype(jnp.uint8)
+    we2 = (pred & wp2).astype(jnp.uint8)
+    new_row = jnp.where(we1 == 1, val1.astype(jnp.uint8), old_row)
+    new_row = jnp.where(we2 == 1, val2.astype(jnp.uint8), new_row)
+    mem = mem.at[:, dst, :].set(new_row)
+
+    return (mem, carry_next.astype(jnp.uint8), mask_next.astype(jnp.uint8)), None
+
+
+@functools.partial(jax.jit, static_argnames=("chain",))
+def _run(mem, carry, mask, prog, chain: bool):
+    (mem, carry, mask), _ = jax.lax.scan(
+        functools.partial(_step, chain), (mem, carry, mask), prog)
+    return mem, carry, mask
+
+
+class ComefaArray:
+    """An array of CoMeFa RAM blocks driven by one instruction stream."""
+
+    def __init__(self, n_blocks: int = 1, chain: bool = False):
+        self.n_blocks = n_blocks
+        self.chain = chain
+        self.cycles = 0           # cycles spent in compute (hybrid) mode
+        self.io_words = 0         # 40-bit words moved through the ports
+        self.reset()
+
+    # -- state ------------------------------------------------------------
+    def reset(self):
+        self.mem = np.zeros((self.n_blocks, N_ROWS, N_COLS), dtype=np.uint8)
+        self.carry = np.zeros((self.n_blocks, N_COLS), dtype=np.uint8)
+        self.mask = np.zeros((self.n_blocks, N_COLS), dtype=np.uint8)
+        self.mem[:, ROW_ONES, :] = 1
+        self.cycles = 0
+        self.io_words = 0
+
+    # -- hybrid-mode logical port access (512 x 40, column mux 4) ---------
+    @staticmethod
+    def _word_cols(addr: int) -> np.ndarray:
+        phase = addr & (COL_MUX - 1)
+        return np.arange(WORD_BITS) * COL_MUX + phase
+
+    def write_word(self, block: int, addr: int, word: int):
+        """Memory-mode style write of one 40-bit word (hybrid max-width)."""
+        assert 0 <= addr < N_ROWS * COL_MUX and addr != isa.INSTR_ADDR
+        row, cols = addr >> 2, self._word_cols(addr)
+        bits = (word >> np.arange(WORD_BITS)) & 1
+        self.mem[block, row, cols] = bits.astype(np.uint8)
+        self.io_words += 1
+
+    def read_word(self, block: int, addr: int) -> int:
+        row, cols = addr >> 2, self._word_cols(addr)
+        bits = self.mem[block, row, cols].astype(np.int64)
+        self.io_words += 1
+        return int((bits << np.arange(WORD_BITS)).sum())
+
+    # -- lane-level helpers (tests / data loading via layout.py) ----------
+    def set_lanes(self, rows: Sequence[int], values: np.ndarray,
+                  block: Optional[int] = None):
+        """values: uint bit matrix [len(rows), lanes(, blocks)]."""
+        sel = slice(None) if block is None else block
+        for r, v in zip(rows, values):
+            self.mem[sel, r, :] = v
+
+    def get_lanes(self, rows: Sequence[int], block: Optional[int] = None):
+        sel = slice(None) if block is None else block
+        return np.stack([self.mem[sel, r, :] for r in rows])
+
+    # -- execution ---------------------------------------------------------
+    def run(self, program) -> int:
+        """Execute a program (list[Instr] or encoded matrix). Returns cycles."""
+        if not isinstance(program, np.ndarray):
+            program = encode_program(program)
+        if program.shape[0] == 0:
+            return 0
+        mem, carry, mask = _run(
+            jnp.asarray(self.mem), jnp.asarray(self.carry),
+            jnp.asarray(self.mask), jnp.asarray(program), self.chain)
+        self.mem = np.asarray(mem)
+        self.carry = np.asarray(carry)
+        self.mask = np.asarray(mask)
+        self.cycles += int(program.shape[0])
+        return int(program.shape[0])

@@ -1,0 +1,116 @@
+"""Transposed data layout + swizzle model (paper Sec. III-E / III-H, Fig 7).
+
+Compute mode stores data *transposed*: one element per column (lane), its
+bits spread across consecutive rows (LSB at the lowest row by our
+convention).  The swizzle module (soft-logic ping-pong FIFO in the paper)
+converts between the element-major stream coming from DRAM and the
+bit-slice words written through the 40-bit port.
+
+All functions are pure numpy; they model *layout*, not timing - the cycle
+cost of loading/unloading is `timing.load_store_cycles`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .isa import COL_MUX, N_COLS, N_ROWS, WORD_BITS
+
+
+def to_bits(values: np.ndarray, n_bits: int) -> np.ndarray:
+    """Integers [N] -> bit matrix [n_bits, N] (LSB first, two's complement)."""
+    v = np.asarray(values).astype(np.int64)
+    return ((v[None, :] >> np.arange(n_bits)[:, None]) & 1).astype(np.uint8)
+
+
+def from_bits(bits: np.ndarray, signed: bool = False) -> np.ndarray:
+    """Bit matrix [n_bits, N] (LSB first) -> integers [N]."""
+    n = bits.shape[0]
+    acc = (bits.astype(np.int64) << np.arange(n)[:, None]).sum(axis=0)
+    if signed:
+        acc = acc - ((bits[-1].astype(np.int64)) << n)
+    return acc
+
+
+def place(arr, values: np.ndarray, base_row: int, n_bits: int,
+          lanes=None, block=None):
+    """Store integer elements transposed into a ComefaArray.
+
+    values: [n_elems] (one block) or [n_blocks, n_elems].
+    """
+    values = np.asarray(values)
+    if values.ndim == 1:
+        bits = to_bits(values, n_bits)                  # [n_bits, N]
+        if lanes is None:
+            lanes = np.arange(bits.shape[1])
+        sel = slice(None) if block is None else block
+        for i in range(n_bits):
+            arr.mem[sel, base_row + i, lanes] = bits[i]
+    else:
+        for b in range(values.shape[0]):
+            place(arr, values[b], base_row, n_bits, lanes=lanes, block=b)
+
+
+def extract(arr, base_row: int, n_bits: int, lanes=None, block=None,
+            signed: bool = False) -> np.ndarray:
+    """Read transposed elements back out. Returns [n_elems] or [nb, n_elems]."""
+    if lanes is None:
+        lanes = np.arange(N_COLS)
+    if block is None:
+        return np.stack([
+            extract(arr, base_row, n_bits, lanes, b, signed)
+            for b in range(arr.n_blocks)])
+    bits = np.stack([arr.mem[block, base_row + i, lanes]
+                     for i in range(n_bits)])
+    return from_bits(bits, signed=signed)
+
+
+# ---------------------------------------------------------------------------
+# Swizzle: element-major DRAM stream <-> bit-slice port words (Fig 7, N=40)
+# ---------------------------------------------------------------------------
+
+def swizzle(elements: np.ndarray, n_bits: int) -> np.ndarray:
+    """Model of the swizzle FIFO: 40 untransposed elements -> n_bits words.
+
+    Word i carries bit i of each of the 40 elements (element j -> word
+    bit j), i.e. one bit-slice per output word, ready to be written to
+    consecutive row addresses of one column-mux phase.
+    Returns uint64 words [n_bits].
+    """
+    assert elements.shape[0] == WORD_BITS, "swizzle operates on 40 elements"
+    bits = to_bits(elements, n_bits)                     # [n_bits, 40]
+    weights = (np.uint64(1) << np.arange(WORD_BITS, dtype=np.uint64))
+    return (bits.astype(np.uint64) * weights[None, :]).sum(axis=1)
+
+
+def unswizzle(words: np.ndarray, n_bits: int) -> np.ndarray:
+    """Inverse of `swizzle`: n_bits bit-slice words -> 40 elements."""
+    words = np.asarray(words, dtype=np.uint64)
+    bits = ((words[:, None] >> np.arange(WORD_BITS, dtype=np.uint64)[None, :])
+            & np.uint64(1)).astype(np.uint8)            # [n_bits, 40]
+    return from_bits(bits)
+
+
+def load_transposed(arr, block: int, values: np.ndarray, base_row: int,
+                    n_bits: int):
+    """Full load path: swizzle an element stream and write port words.
+
+    Elements land in lanes grouped by column-mux phase: element j of chunk c
+    (40 elements per chunk, COL_MUX chunks per row span) occupies lane
+    ``COL_MUX * j + c``.  Uses the hybrid-mode port (so `io_words` counts
+    the real port traffic) rather than poking `mem` directly.
+    """
+    values = np.asarray(values)
+    assert values.shape[0] <= WORD_BITS * COL_MUX
+    for c in range(int(np.ceil(values.shape[0] / WORD_BITS))):
+        chunk = values[c * WORD_BITS:(c + 1) * WORD_BITS]
+        if chunk.shape[0] < WORD_BITS:
+            chunk = np.pad(chunk, (0, WORD_BITS - chunk.shape[0]))
+        for i, w in enumerate(swizzle(chunk, n_bits)):
+            addr = ((base_row + i) << 2) | c
+            arr.write_word(block, addr, int(w))
+
+
+def lane_of(element_index: int) -> int:
+    """Lane occupied by element j after `load_transposed`."""
+    c, j = divmod(element_index, WORD_BITS)
+    return COL_MUX * j + c

@@ -1,0 +1,534 @@
+"""CoMeFa program generators (the "instruction generation FSM" of Sec. III-D).
+
+Each function assembles the bit-serial instruction sequence for one
+operation, mirroring the algorithms of Sec. III-E/G/I.  Cycle counts are
+the program lengths; `timing.py` holds the paper's closed-form formulas and
+the tests assert the two agree.
+
+Operand convention: an n-bit operand is a list of n row indices, LSB first.
+All lanes (columns) execute the same program - one program computes 160
+results per block, `n_blocks * 160` results per array.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from .block import ROW_ONES
+from .isa import (Instr, PRED_ALWAYS, PRED_CARRY, PRED_MASK, PRED_NOT_CARRY,
+                  TT_AND, TT_COPY_A, TT_COPY_B, TT_NOT_A, TT_ONE, TT_OR,
+                  TT_XNOR, TT_XOR, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY, W2_LEFT)
+
+Rows = Sequence[int]
+
+
+def _w1(**kw) -> Instr:
+    return Instr(wp1_en=1, w1_sel=W1_S, **kw)
+
+
+# ---------------------------------------------------------------------------
+# register-level primitives
+# ---------------------------------------------------------------------------
+
+def zero_rows(rows: Rows) -> List[Instr]:
+    """dst <- 0 (one cycle per row)."""
+    return [_w1(dst_row=r, truth_table=TT_ZERO, c_rst=1) for r in rows]
+
+
+def copy_rows(src: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+    """dst <- src (optionally predicated), one cycle per row."""
+    return [_w1(src1_row=s, dst_row=d, truth_table=TT_COPY_A, c_rst=1,
+                pred_sel=pred_sel) for s, d in zip(src, dst)]
+
+
+def logic2(src1: Rows, src2: Rows, dst: Rows, tt: int,
+           pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+    """Bulk bitwise op: dst <- f(src1, src2). One cycle per row (Sec. V-A)."""
+    return [_w1(src1_row=a, src2_row=b, dst_row=d, truth_table=tt, c_rst=1,
+                pred_sel=pred_sel)
+            for a, b, d in zip(src1, src2, dst)]
+
+
+def logic_ext(src1: Rows, dst: Rows, tt: int, ext_bits: Sequence[int],
+              pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+    """OOOR bitwise op against an outside operand broadcast bit-by-bit."""
+    return [_w1(src1_row=a, dst_row=d, truth_table=tt, c_rst=1, b_ext=1,
+                ext_bit=e, pred_sel=pred_sel)
+            for a, d, e in zip(src1, dst, ext_bits)]
+
+
+def preset_carry() -> List[Instr]:
+    """Force the carry latch to 1 (reads the constant ones row twice)."""
+    return [Instr(src1_row=ROW_ONES, src2_row=ROW_ONES, truth_table=TT_AND,
+                  c_en=1, c_rst=1)]
+
+
+def store_carry(dst_row: int, pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+    """Write the latched carry to a row via Port B's write path (mux W2)."""
+    return [Instr(dst_row=dst_row, wp2_en=1, w2_sel=W2_CARRY,
+                  pred_sel=pred_sel)]
+
+
+# ---------------------------------------------------------------------------
+# fixed-point arithmetic (Sec. III-E)
+# ---------------------------------------------------------------------------
+
+def add(a: Rows, b: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS,
+        store_cout: bool = True, preset: bool = False) -> List[Instr]:
+    """dst <- a + b.  n+1 cycles for n-bit operands (paper Sec. III-E).
+
+    dst must have n+1 rows when store_cout (the extra final-carry row).
+    `preset` starts the carry chain at 1 (used by `sub`).
+    """
+    n = len(a)
+    prog: List[Instr] = []
+    for i in range(n):
+        prog.append(_w1(src1_row=a[i], src2_row=b[i], dst_row=dst[i],
+                        truth_table=TT_XOR, c_en=1,
+                        c_rst=1 if (i == 0 and not preset) else 0,
+                        pred_sel=pred_sel))
+    if store_cout:
+        prog += store_carry(dst[n], pred_sel=pred_sel)
+    return prog
+
+
+def add_ext(a: Rows, const_bits: Sequence[int], dst: Rows,
+            pred_sel: int = PRED_ALWAYS, store_cout: bool = True,
+            preset: bool = False) -> List[Instr]:
+    """OOOR add: dst <- a + constant (constant streamed bit-serially)."""
+    n = len(a)
+    prog: List[Instr] = []
+    for i in range(n):
+        prog.append(_w1(src1_row=a[i], dst_row=dst[i], truth_table=TT_XOR,
+                        b_ext=1, ext_bit=const_bits[i], c_en=1,
+                        c_rst=1 if (i == 0 and not preset) else 0,
+                        pred_sel=pred_sel))
+    if store_cout:
+        prog += store_carry(dst[n], pred_sel=pred_sel)
+    return prog
+
+
+def sub(a: Rows, b: Rows, dst: Rows, tmp: Rows,
+        store_cout: bool = True) -> List[Instr]:
+    """dst <- a - b via a + ~b + 1.  2n+2 cycles (+1 for carry-out row).
+
+    The stored carry-out is the *no-borrow* flag: 1 iff a >= b (unsigned).
+    tmp: n scratch rows for ~b.
+    """
+    n = len(a)
+    prog = logic2(b, b, tmp, TT_NOT_A)          # tmp <- ~b        (n cycles)
+    prog += preset_carry()                      # carry <- 1       (1 cycle)
+    prog += add(a, tmp, dst, store_cout=store_cout, preset=True)
+    return prog
+
+
+def mul(a: Rows, b: Rows, dst: Rows) -> List[Instr]:
+    """dst(2n rows) <- a * b (unsigned).  Exactly n^2+3n-2 cycles.
+
+    Shift-and-add with mask predication (Sec. III-E):
+      - iteration 0 writes P[j] = b[j] AND a[0] directly (n cycles), upper
+        half of P is zeroed (n cycles);
+      - iterations i=1..n-1: load mask <- a[i] (1), predicated in-place add
+        of b into P[i..i+n-1] (n), predicated carry store into P[i+n] (1).
+    """
+    n = len(a)
+    assert len(dst) == 2 * n
+    prog: List[Instr] = []
+    prog += zero_rows(dst[n:])                              # n
+    prog += logic2(b, [a[0]] * n, dst[:n], TT_AND)          # n (iteration 0)
+    for i in range(1, n):
+        prog.append(Instr(src1_row=a[i], truth_table=TT_COPY_A, m_en=1,
+                          c_rst=1))                         # mask <- a[i]
+        prog += add(b, dst[i:i + n], dst[i:i + n], pred_sel=PRED_MASK,
+                    store_cout=False)
+        # masked columns must not pollute P[i+n]: predicated carry store
+        prog += store_carry(dst[i + n], pred_sel=PRED_MASK)
+    return prog
+
+
+# in-place add of b into acc starting at bit offset `off` (used by dot/OOOR)
+def add_into(acc: Rows, b: Rows, off: int,
+             pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+    n = len(b)
+    assert off + n <= len(acc)
+    seg = list(acc[off:off + n])
+    prog = add(seg, b, seg, pred_sel=pred_sel, store_cout=False)
+    if off + n < len(acc):
+        # ripple the carry-out through the remaining accumulator bits:
+        # acc[off+n:] += carry  ==  add_ext of constant 0 with preset carry
+        rem = list(acc[off + n:])
+        prog += add_ext(rem, [0] * len(rem), rem, pred_sel=pred_sel,
+                        store_cout=False, preset=True)
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# shifts (Sec. III-F)
+# ---------------------------------------------------------------------------
+
+def shift_lanes(src: Rows, dst: Rows, left: bool = True) -> List[Instr]:
+    """Shift an operand one *lane* (column) left/right.  One cycle per row.
+
+    Left shift: lane i receives lane i+1's bit (data moves toward lane 0),
+    via W1 selecting the right neighbour's S; right shift via W2/left
+    neighbour - matching Fig 2/6b.  Block chaining applies when the array
+    was built with chain=True.
+    """
+    prog = []
+    for s, d in zip(src, dst):
+        if left:
+            prog.append(Instr(src1_row=s, dst_row=d, truth_table=TT_COPY_A,
+                              c_rst=1, wp1_en=1, w1_sel=W1_RIGHT))
+        else:
+            prog.append(Instr(src1_row=s, dst_row=d, truth_table=TT_COPY_A,
+                              c_rst=1, wp2_en=1, w2_sel=W2_LEFT))
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# reduction (Sec. IV-C "Reduction")
+# ---------------------------------------------------------------------------
+
+def reduce_pairwise(val: Rows, scratch: Rows, width: int,
+                    distance: int) -> List[Instr]:
+    """One tree-reduction step: every lane adds the lane `distance` to its
+    right: val[0:width+1] <- val + shift_left^distance(val).
+
+    scratch needs `width` rows.  Cost: distance*width + (width+1) cycles.
+    """
+    prog: List[Instr] = []
+    cur = list(val[:width])
+    for d in range(distance):
+        prog += shift_lanes(cur, scratch[:width], left=True)
+        cur = list(scratch[:width])
+    prog += add(val[:width], cur, list(val[:width + 1]), store_cout=True)
+    return prog
+
+
+def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int) -> List[Instr]:
+    """Reduce 2^steps consecutive lanes into lane 0 of each group.
+
+    After step s the live accumulator width grows by one bit.  Lane L of
+    each group of 2^steps lanes ends with the group sum in lane 0 (other
+    lanes hold garbage partial sums - exactly the paper's "40 partial sums
+    per RAM" pattern when steps=2 over the 4 column-mux phases).
+    """
+    prog: List[Instr] = []
+    w = width
+    for s in range(steps):
+        prog += reduce_pairwise(val, scratch, w, 1 << s)
+        w += 1
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# OOOR dot product (Sec. III-I): weights resident, activations streamed
+# ---------------------------------------------------------------------------
+
+def ooor_dot(weight_rows: Sequence[Rows], x_values: Sequence[int],
+             x_bits: int, acc: Rows) -> List[Instr]:
+    """acc <- sum_j w_j * x_j with x outside the RAM.
+
+    For each j, only the *set* bits b of x_j trigger an add of w_j into the
+    accumulator at offset b - the paper's zero-bit-skipping optimization
+    (~2x on average vs. streaming all bits).  The instruction generator
+    (this function) inspects x, which is exactly the OOOR mechanism: the
+    outside operand is visible to the FSM, not stored in the array.
+    """
+    prog: List[Instr] = []
+    prog += zero_rows(acc)
+    for j, xj in enumerate(x_values):
+        assert 0 <= xj < (1 << x_bits)
+        for b in range(x_bits):
+            if (xj >> b) & 1:
+                prog += add_into(acc, weight_rows[j], b)
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# database search / RAID (Sec. IV-C bulk bitwise)
+# ---------------------------------------------------------------------------
+
+def search_replace(record_rows: Rows, key: int, n_bits: int,
+                   tmp: Rows) -> List[Instr]:
+    """Zero out records equal to `key` (DB search benchmark).
+
+    xor with key (OOOR, n cycles) -> OR-reduce the xor bits into a "differs"
+    flag (n-1 cycles, accumulated in tmp[0]) -> load mask from the flag ->
+    clear record rows predicated on match (mask = differs -> we need the
+    complement, so the mask is loaded from NOR instead).
+    """
+    n = n_bits
+    key_bits = [(key >> i) & 1 for i in range(n)]
+    prog = logic_ext(record_rows, tmp[:n], TT_XOR, key_bits)
+    for i in range(1, n):
+        prog += logic2([tmp[0]], [tmp[i]], [tmp[0]], TT_OR)
+    # mask <- (differs == 0), i.e. NOT of tmp[0]
+    prog.append(Instr(src1_row=tmp[0], truth_table=TT_NOT_A, m_en=1, c_rst=1))
+    prog += [_w1(dst_row=r, truth_table=TT_ZERO, c_rst=1, pred_sel=PRED_MASK)
+             for r in record_rows]
+    return prog
+
+
+def raid_rebuild(data_rows: Sequence[Rows], parity: Rows, out: Rows) -> List[Instr]:
+    """Reconstruct a lost RAID stripe: out <- XOR of all surviving rows.
+
+    Un-transposed layout (Sec. IV-C): each row holds one full operand, so a
+    w-word stripe needs w XOR cycles per surviving drive.
+    """
+    prog = copy_rows(parity, out)
+    for rows in data_rows:
+        prog += logic2(out, rows, out, TT_XOR)
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# floating point (Sec. III-G, algorithms adapted from FloatPIM)
+# ---------------------------------------------------------------------------
+
+def fp_mul(sa: int, ea: Rows, ma: Rows, sb: int, eb: Rows, mb: Rows,
+           sign_a_row: int, sign_b_row: int, sign_out: int,
+           e_out: Rows, m_out: Rows, scratch: Rows, e_bits: int,
+           m_bits: int, bias: Optional[int] = None) -> List[Instr]:
+    """Floating-point multiply, sign/exponent/mantissa rows per element.
+
+    Layout: exponents biased, mantissas without the implicit 1 (IEEE-like,
+    no subnormals, truncating rounding - FloatPIM semantics).
+    Scratch needs 2*(m_bits+1) + (e_bits+2) + (m_bits+1)*2 rows.
+
+    Cycle count ~= M^2+7M+3E+5 (paper's approximation; tests assert the
+    exact program length stays within a few cycles of it).
+    """
+    E, M = e_bits, m_bits
+    if bias is None:
+        bias = (1 << (E - 1)) - 1
+    prog: List[Instr] = []
+    # sign
+    prog += logic2([sign_a_row], [sign_b_row], [sign_out], TT_XOR)
+    # exponent: e_out = ea + eb - bias, computed in place (carry scratch row)
+    esum = list(e_out) + [scratch[0]]
+    prog += add(ea, eb, esum, store_cout=True)
+    neg_bias = ((1 << (E + 1)) - bias) & ((1 << (E + 1)) - 1)
+    nb_bits = [(neg_bias >> i) & 1 for i in range(E + 1)]
+    prog += add_ext(esum, nb_bits, esum, store_cout=False)
+    # mantissa with implicit leading one: the constant ones row *is* the
+    # leading-1 bit, so no operand copies are needed (A = rows ma + ones).
+    a1 = list(ma) + [ROW_ONES]
+    b1 = list(mb) + [ROW_ONES]
+    prod = list(scratch[1:1 + 2 * (M + 1)])
+    prog += mul(a1, b1, prod)                       # (M+1)^2+3(M+1)-2
+    # normalize: product value v in [1,4); top bit prod[2M+1] == (v >= 2).
+    prog.append(Instr(src1_row=prod[2 * M + 1], truth_table=TT_COPY_A,
+                      m_en=1, c_rst=1))
+    # fraction bits: v<2 -> prod[M:2M]; v>=2 -> prod[M+1:2M+1] (result v/2).
+    # unconditional low-case copy, then masked high-case overwrite
+    prog += copy_rows(prod[M:2 * M], m_out)
+    prog += copy_rows(prod[M + 1:2 * M + 1], m_out, pred_sel=PRED_MASK)
+    # exponent correction: +1 when the mask is set
+    one_bits = [1] + [0] * E
+    prog += add_ext(esum, one_bits, esum, pred_sel=PRED_MASK,
+                    store_cout=False)
+    return prog
+
+
+def fp_add_same_sign(ea: Rows, ma: Rows, eb: Rows, mb: Rows,
+                     e_out: Rows, m_out: Rows, scratch: Rows,
+                     e_bits: int, m_bits: int) -> List[Instr]:
+    """Floating-point add for operands of equal sign (magnitude add).
+
+    Mixed-sign addition needs a leading-zero-count renormalisation loop the
+    paper only costs approximately; the simulator implements the same-sign
+    path exactly (see DESIGN.md scope note), the timing model uses the
+    paper's 2ME+9M+7E+12 formula for both.
+
+    Steps: exponent compare/subtract -> operand select (carry predicates) ->
+    barrel-aligned mantissa shift (E stages of predicated row copies) ->
+    mantissa add -> 1-step renormalise + exponent increment.
+    """
+    E, M = e_bits, m_bits
+    prog: List[Instr] = []
+    o = 0
+    def take(k):
+        nonlocal o
+        rows = list(scratch[o:o + k]); o += k
+        return rows
+    d_ab = take(E + 1)      # ea - eb (carry row = a>=b flag)
+    d_ba = take(E + 1)
+    tmp = take(E)
+    e_big = take(E)
+    m_big = take(M + 1)     # with implicit 1
+    m_small = take(M + 1)
+    d_abs = take(E)
+    ssum = take(M + 3)
+
+    prog += sub(ea, eb, d_ab, tmp, store_cout=True)   # carry=1 iff ea>=eb
+    prog += sub(eb, ea, d_ba, tmp, store_cout=True)
+    # carry latch currently holds the borrow flag of (eb-ea); reload the
+    # a>=b flag from d_ab's stored carry row (CGEN with A=B=flag, cin=0):
+    prog.append(Instr(src1_row=d_ab[E], src2_row=d_ab[E],
+                      truth_table=TT_AND, c_en=1, c_rst=1))
+    prog += copy_rows(ea, e_big, pred_sel=PRED_CARRY)
+    prog += copy_rows(eb, e_big, pred_sel=PRED_NOT_CARRY)
+    prog += copy_rows(ma, m_big[:M], pred_sel=PRED_CARRY)
+    prog += copy_rows(mb, m_big[:M], pred_sel=PRED_NOT_CARRY)
+    prog += copy_rows(mb, m_small[:M], pred_sel=PRED_CARRY)
+    prog += copy_rows(ma, m_small[:M], pred_sel=PRED_NOT_CARRY)
+    prog += copy_rows([ROW_ONES], [m_big[M]])
+    prog += copy_rows([ROW_ONES], [m_small[M]])
+    prog += copy_rows(d_ab[:E], d_abs, pred_sel=PRED_CARRY)
+    prog += copy_rows(d_ba[:E], d_abs, pred_sel=PRED_NOT_CARRY)
+    # align m_small right by d_abs: E barrel stages of predicated copies
+    for k in range(E):
+        prog.append(Instr(src1_row=d_abs[k], truth_table=TT_COPY_A, m_en=1,
+                          c_rst=1))
+        s = 1 << k
+        for j in range(M + 1):
+            src = m_small[j + s] if j + s <= M else None
+            if src is None:
+                prog += [_w1(dst_row=m_small[j], truth_table=TT_ZERO,
+                             c_rst=1, pred_sel=PRED_MASK)]
+            else:
+                prog += copy_rows([src], [m_small[j]], pred_sel=PRED_MASK)
+    # mantissa add (M+1 bits + carry)
+    prog += add(m_big, m_small, ssum[:M + 2], store_cout=True)
+    # renormalise: if carry-out bit (sum >= 2.0) set, shift right 1 & e+1
+    prog.append(Instr(src1_row=ssum[M + 1], truth_table=TT_COPY_A, m_en=1,
+                      c_rst=1))
+    prog += copy_rows(ssum[:M], m_out)               # no-overflow case
+    prog += copy_rows(ssum[1:M + 1], m_out, pred_sel=PRED_MASK)
+    prog += copy_rows(e_big, e_out)
+    prog += add_ext(e_out, [1] + [0] * (E - 1), e_out, pred_sel=PRED_MASK,
+                    store_cout=False)
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# extended ops: compare/select, max-reduce, division, Booth OOOR
+# (all built from the same ISA - the paper's "versatile blocks" claim)
+# ---------------------------------------------------------------------------
+
+def compare_ge(a: Rows, b: Rows, tmp: Rows, flag_row: int) -> List[Instr]:
+    """flag <- (a >= b) per lane, via the subtract borrow chain.
+
+    2n+3 cycles; leaves the flag in `flag_row` AND in the carry latch
+    (so a following predicated op can use PRED_CARRY directly).
+    """
+    n = len(a)
+    prog = sub(a, b, list(tmp[:n]) + [flag_row], list(tmp[n:2 * n]),
+               store_cout=True)
+    return prog
+
+
+def select(cond_carry: bool, a: Rows, b: Rows, dst: Rows) -> List[Instr]:
+    """dst <- carry ? a : b (2n cycles of predicated copies)."""
+    prog = copy_rows(a, dst, pred_sel=PRED_CARRY)
+    prog += copy_rows(b, dst, pred_sel=PRED_NOT_CARRY)
+    return prog
+
+
+def reduce_max(val: Rows, scratch: Rows, n_bits: int,
+               distance: int) -> List[Instr]:
+    """One max-tree step: each lane takes max(self, lane+distance).
+
+    scratch: n_bits (shifted copy) + 2*n_bits+1 (compare temps) rows.
+    """
+    n = n_bits
+    shifted = list(scratch[:n])
+    tmp = list(scratch[n:3 * n + 1])
+    prog: List[Instr] = []
+    cur = list(val[:n])
+    for _ in range(distance):
+        prog += shift_lanes(cur, shifted, left=True)
+        cur = shifted
+    # carry <- (self >= shifted); keep self where true, else take shifted
+    prog += compare_ge(val[:n], shifted, tmp, tmp[2 * n])
+    prog += copy_rows(shifted, val[:n], pred_sel=PRED_NOT_CARRY)
+    return prog
+
+
+def div(a: Rows, b: Rows, quot: Rows, rem: Rows, scratch: Rows
+        ) -> List[Instr]:
+    """Restoring long division: quot, rem <- a // b, a % b (unsigned).
+
+    a, b, quot, rem: n rows each; scratch: 2n+1 + n rows.
+    ~n*(3n+5) cycles - bit-serial division is expensive, exactly why the
+    paper steers division-free algorithms toward CoMeFa blocks.
+    """
+    n = len(a)
+    diff = list(scratch[:n + 1])
+    tmp = list(scratch[n + 1:2 * n + 1])
+    prog: List[Instr] = zero_rows(rem)
+    for i in reversed(range(n)):
+        # rem = (rem << 1) | a_i   (shift within the bit rows of each lane)
+        for j in reversed(range(1, n)):
+            prog += copy_rows([rem[j - 1]], [rem[j]])
+        prog += copy_rows([a[i]], [rem[0]])
+        # carry <- rem >= b ; diff = rem - b
+        prog += sub(rem, b, diff, tmp, store_cout=True)
+        # reload the no-borrow flag into the carry latch
+        prog.append(Instr(src1_row=diff[n], src2_row=diff[n],
+                          truth_table=TT_AND, c_en=1, c_rst=1))
+        # if no borrow: rem = diff, quot_i = 1 else quot_i = 0
+        prog += copy_rows(diff[:n], rem, pred_sel=PRED_CARRY)
+        prog += copy_rows([ROW_ONES], [quot[i]], pred_sel=PRED_CARRY)
+        prog += [_w1(dst_row=quot[i], truth_table=TT_ZERO, c_rst=1,
+                     pred_sel=PRED_NOT_CARRY)]
+    return prog
+
+
+def booth_digits(x: int, n_bits: int) -> List[int]:
+    """Canonical (NAF) Booth recoding of x: digits in {-1,0,+1}.
+
+    sum(d_i * 2^i) == x.  The non-adjacent form has minimal Hamming
+    weight among signed-digit representations - never more nonzero
+    digits than binary, and ~2x fewer for runs of ones: the paper's
+    "efficient algorithms like booth multiplication can also be
+    deployed" (Sec. III-I).
+    """
+    digits = []
+    while x:
+        if x & 1:
+            d = 2 - (x & 3)              # +1 if x%4==1, -1 if x%4==3
+            x -= d
+        else:
+            d = 0
+        digits.append(d)
+        x >>= 1
+    return digits
+
+
+def ooor_dot_booth(weight_rows: Sequence[Rows], x_values: Sequence[int],
+                   x_bits: int, acc: Rows, neg_scratch: Rows
+                   ) -> List[Instr]:
+    """OOOR dot product with Booth-recoded outside operand.
+
+    For x values with long runs of ones (e.g. 0b0111110), Booth recoding
+    cuts add passes well below popcount(x); worst case equals naive OOOR.
+    Negative digits subtract: w is complemented into scratch once per
+    element, then added with a preset carry at the digit offset.
+    """
+    nw = len(weight_rows[0])
+    prog: List[Instr] = zero_rows(acc)
+    for j, xj in enumerate(x_values):
+        w = weight_rows[j]
+        digits = booth_digits(xj, x_bits)
+        if any(d < 0 for d in digits):
+            prog += logic2(w, w, neg_scratch[:nw], TT_NOT_A)
+        for off, d in enumerate(digits):
+            if d == 0:
+                continue
+            if off + nw > len(acc):
+                break
+            if d > 0:
+                prog += add_into(acc, w, off)
+            else:
+                # acc += (~w + 1) << off : add complement with preset carry
+                seg = list(acc[off:off + nw])
+                prog += preset_carry()
+                prog += add(seg, neg_scratch[:nw], seg, preset=True,
+                            store_cout=False)
+                # sign-extend the complement through the top bits
+                rem_rows = list(acc[off + nw:])
+                if rem_rows:
+                    prog += add_ext(rem_rows, [1] * len(rem_rows), rem_rows,
+                                    store_cout=False, preset=True)
+    return prog

@@ -1,0 +1,126 @@
+"""Closed-form cycle counts for CoMeFa operations (paper Secs. III-E/G/I).
+
+These formulas drive the analytical FPGA performance model
+(`fpga_model/perf.py`).  The functional simulator's generated programs are
+asserted against them in tests - exact equality for the fixed-point ops
+(the paper's n+1 / n^2+3n-2 are exact) and small-tolerance agreement for
+floating point (the paper calls those counts approximate).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def add_cycles(n: int) -> int:
+    """n-bit add: n sum cycles + 1 final carry store (Sec. III-E)."""
+    return n + 1
+
+
+def sub_cycles(n: int) -> int:
+    """a - b = a + ~b + 1: invert (n) + carry preset (1) + add (n+1)."""
+    return 2 * n + 2
+
+
+def mul_cycles(n: int) -> int:
+    """n-bit multiply, 2n-bit product (Sec. III-E): n^2 + 3n - 2."""
+    return n * n + 3 * n - 2
+
+
+def mac_cycles(n: int, acc_bits: int) -> int:
+    """Multiply-accumulate: n-bit mul + accumulate into acc_bits (Fig 8)."""
+    return mul_cycles(n) + add_cycles(acc_bits)
+
+
+def fp_mul_cycles(e: int, m: int) -> int:
+    """FP multiply ~= M^2 + 7M + 3E + 5 (Sec. III-G)."""
+    return m * m + 7 * m + 3 * e + 5
+
+
+def fp_add_cycles(e: int, m: int) -> int:
+    """FP add ~= 2ME + 9M + 7E + 12 (Sec. III-G)."""
+    return 2 * m * e + 9 * m + 7 * e + 12
+
+
+def fp_mac_cycles(e: int, m: int) -> int:
+    return fp_mul_cycles(e, m) + fp_add_cycles(e, m)
+
+
+def ooor_dot_cycles(k: int, w_bits: int, x_bits: int,
+                    acc_bits: int, zero_skip: bool = True) -> int:
+    """Dot product of length k with weights resident, x streamed (Sec. III-I).
+
+    Each contributing x-bit costs one accumulator-segment add.  With OOOR
+    zero-bit skipping the average x has x_bits/2 set bits -> ~2x fewer
+    cycles than the naive all-bits schedule (the paper's reported 2x).
+    """
+    bits_per_elem = x_bits / 2 if zero_skip else x_bits
+    per_add = add_cycles(w_bits) + max(0, acc_bits - (w_bits + 1))  # ripple
+    return int(round(k * bits_per_elem * per_add)) + acc_bits  # + acc zeroing
+
+
+def load_store_cycles(n_elems: int, n_bits: int, port_width: int = 40) -> int:
+    """Port traffic to (un)load n_elems of n_bits through the 40b port.
+
+    Hybrid mode fixes the geometry at 512x40; one bit-slice word moves 40
+    element-bits per cycle (the swizzle FIFO sustains one word/cycle).
+    """
+    import math
+    return math.ceil(n_elems / port_width) * n_bits
+
+
+def reduction_cycles(n_bits: int, lanes: int = 160, steps: int = 2,
+                     acc_bits: int = 32) -> int:
+    """In-RAM tree reduction to `lanes/2**steps` partial sums (Sec. IV-C).
+
+    Step s (distance 2^s) costs 2^s * w_s shift cycles + (w_s + 1) add
+    cycles where w_s = n_bits + s is the growing accumulator width.
+    Matches `program.reduce_tree`.
+    """
+    total = 0
+    w = n_bits
+    for s in range(steps):
+        total += (1 << s) * w + (w + 1)
+        w += 1
+    return total
+
+
+def search_cycles(n_bits: int) -> int:
+    """DB search+replace: xor (n) + OR-reduce (n-1) + mask (1) + clear (n)."""
+    return 3 * n_bits
+
+
+def raid_cycles(n_words: int, n_drives: int) -> int:
+    """RAID rebuild, untransposed layout: copy parity + XOR per drive."""
+    return n_words * n_drives
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """A numeric format for the throughput/benchmark sweeps (Fig 8)."""
+    name: str
+    int_bits: int = 0          # fixed-point operand width (0 = float)
+    acc_bits: int = 0          # fixed-point accumulator width
+    e_bits: int = 0            # float exponent bits
+    m_bits: int = 0            # float mantissa bits
+    acc_e: int = 0
+    acc_m: int = 0
+
+    @property
+    def is_float(self) -> bool:
+        return self.int_bits == 0
+
+    def mac(self) -> int:
+        if self.is_float:
+            # multiply in (e,m); accumulate in the wider accumulator format
+            return fp_mul_cycles(self.e_bits, self.m_bits) + \
+                fp_add_cycles(self.acc_e, self.acc_m)
+        return mac_cycles(self.int_bits, self.acc_bits)
+
+
+# the paper's evaluated precisions (Sec. V-A)
+INT4 = Precision("int4", int_bits=4, acc_bits=16)
+INT8 = Precision("int8", int_bits=8, acc_bits=27)
+INT16 = Precision("int16", int_bits=16, acc_bits=36)
+HFP8 = Precision("hfp8", e_bits=4, m_bits=3, acc_e=6, acc_m=9)
+FP16 = Precision("fp16", e_bits=5, m_bits=10, acc_e=8, acc_m=23)
+PRECISIONS = (INT4, INT8, INT16, HFP8, FP16)

@@ -1,0 +1,2 @@
+"""Analytical Arria-10-like FPGA model: resources, throughput, perf, energy, area."""
+from . import area, energy, perf, resources, throughput

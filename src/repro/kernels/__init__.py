@@ -1,0 +1,2 @@
+"""Pallas TPU kernels: bit-plane/bit-serial compute (CoMeFa on the MXU/VPU)."""
+from . import ops, ref

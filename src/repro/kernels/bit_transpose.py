@@ -1,0 +1,77 @@
+"""Bit-transpose (swizzle) Pallas kernel - paper Sec. III-H, Fig 7.
+
+Converts an element-major integer stream into packed bit-planes on the fly,
+the role of the paper's soft-logic swizzle module between DRAM and the
+CoMeFa RAM.  On TPU this is the HBM->VMEM layout conversion done once at
+weight-load/quantization time (or per-tile for activations in the fully
+bit-serial path).
+
+Forward: int32 [N] -> uint32 [bits, N/32];  inverse unswizzles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant.bitplane import LANES
+
+
+def _fwd_kernel(x_ref, o_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.uint32)                 # [1, bw*32]
+    bw = o_ref.shape[1]
+    grp = x.reshape(bw, LANES)                        # word-major groups
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.uint32, (bw, LANES), 1))
+    for i in range(bits):
+        bitmat = (grp >> i) & 1
+        o_ref[i, :] = jnp.sum(bitmat * weights, axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bw", "interpret"))
+def bit_transpose(x: jax.Array, *, bits: int, bw: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """Element-major int32 [N] -> packed planes uint32 [bits, N/32]."""
+    n = x.shape[0]
+    assert n % (bw * LANES) == 0
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, bits=bits),
+        grid=(n // (bw * LANES),),
+        in_specs=[pl.BlockSpec((1, bw * LANES), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bits, bw), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bits, n // LANES), jnp.uint32),
+        interpret=interpret,
+    )(x.reshape(1, n))
+
+
+def _inv_kernel(p_ref, o_ref, *, bits: int, signed: bool):
+    planes = p_ref[...]                               # [bits, bw]
+    bw = planes.shape[1]
+    vals = jnp.zeros((bw, LANES), jnp.int32)
+    sh = jax.lax.broadcasted_iota(jnp.uint32, (bw, LANES), 1)
+    for i in range(bits):
+        bit = ((planes[i][:, None] >> sh) & 1).astype(jnp.int32)
+        weight = -(1 << i) if (signed and i == bits - 1) else (1 << i)
+        vals = vals + bit * weight
+    o_ref[...] = vals.reshape(1, bw * LANES)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "bw", "signed", "interpret"))
+def bit_untranspose(packed: jax.Array, *, bits: int, bw: int = 256,
+                    signed: bool = True, interpret: bool = False
+                    ) -> jax.Array:
+    """Packed planes uint32 [bits, W] -> element-major int32 [W*32]."""
+    w = packed.shape[1]
+    assert packed.shape[0] == bits and w % bw == 0
+    out = pl.pallas_call(
+        functools.partial(_inv_kernel, bits=bits, signed=signed),
+        grid=(w // bw,),
+        in_specs=[pl.BlockSpec((bits, bw), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, bw * LANES), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, w * LANES), jnp.int32),
+        interpret=interpret,
+    )(packed)
+    return out[0]

@@ -1,0 +1,61 @@
+"""Bit-serial reduction Pallas kernel (paper Sec. IV-C "Reduction").
+
+Sum of N w-bit integers from their packed bit-planes:
+
+    sum(x) = sum_i c_i * popcount(plane_i)
+
+- the popcount over a packed word is the TPU analogue of CoMeFa's in-RAM
+lane-tree reduction (one VPU op covers 32 lanes x vector width).  Grid
+tiles the W packed words; per-tile partial sums land in an [1, bw] lane
+accumulator folded at the end (like the paper's 40 partial sums per RAM
+that a soft-logic bit-serial adder finishes off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..quant.bitplane import coeffs
+
+
+def _kernel(p_ref, o_ref, acc_ref, *, bits: int, cs: tuple):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    planes = p_ref[...]                              # [bits, bw]
+    part = jnp.zeros(planes.shape[1:], jnp.float32)
+    for b in range(bits):
+        pops = jax.lax.population_count(planes[b]).astype(jnp.int32)
+        part += cs[b] * pops.astype(jnp.float32)
+    acc_ref[...] += part[None, :]
+
+    @pl.when(i == n - 1)
+    def _():
+        o_ref[0, 0] = jnp.sum(acc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bw", "interpret"))
+def bitserial_reduce(packed: jax.Array, *, bits: int, bw: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """Scalar sum of the packed signed integers. packed: uint32 [bits, W]."""
+    w = packed.shape[1]
+    assert packed.shape[0] == bits and w % bw == 0
+    cs = tuple(float(c) for c in coeffs(bits))
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, cs=cs),
+        grid=(w // bw,),
+        in_specs=[pl.BlockSpec((bits, bw), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(packed)
+    return out[0, 0]

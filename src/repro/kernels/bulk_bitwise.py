@@ -1,0 +1,85 @@
+"""Bulk bitwise Pallas kernels: DB search-replace and RAID rebuild.
+
+TPU analogues of the paper's on-chip-bandwidth benchmarks (Sec. IV-C):
+32*lane-width records are processed per VPU op on packed planes, the same
+way a CoMeFa row op touches all 160 columns.
+
+search_replace: records stored bit-transposed ([bits, W] uint32, 32 records
+per word - the paper's in-RAM layout).  XOR each plane with its key bit,
+OR-reduce to a "differs" mask, clear matching records (write the marker 0)
+- instruction-for-instruction the sequence of `program.search_replace`.
+
+raid_xor: untransposed layout (paper: "bits of one operand in one row"):
+XOR-fold D surviving stripes, one [bd, bw] tile per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _search_kernel(p_ref, o_ref, m_ref, *, bits: int, key: int):
+    planes = p_ref[...]                          # [bits, bw] uint32
+    diff = jnp.zeros_like(planes[0])
+    for i in range(bits):                        # xor + OR-reduce
+        key_word = jnp.uint32(0xFFFFFFFF if (key >> i) & 1 else 0)
+        diff = diff | (planes[i] ^ key_word)
+    match = ~diff                                # 1-bits where record == key
+    out = jnp.stack([planes[i] & diff for i in range(bits)])
+    o_ref[...] = out
+    m_ref[...] = match[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "key", "bw", "interpret"))
+def search_replace(packed: jax.Array, *, bits: int, key: int,
+                   bw: int = 512, interpret: bool = False):
+    """Zero out records equal to `key`; also return the match mask.
+
+    packed: uint32 [bits, W] (records bit-transposed, 32 per word).
+    Returns (packed_out [bits, W], match_mask [W]).
+    """
+    w = packed.shape[1]
+    assert packed.shape[0] == bits and w % bw == 0
+    out, mask = pl.pallas_call(
+        functools.partial(_search_kernel, bits=bits, key=key),
+        grid=(w // bw,),
+        in_specs=[pl.BlockSpec((bits, bw), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((bits, bw), lambda i: (0, i)),
+                   pl.BlockSpec((1, bw), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((bits, w), jnp.uint32),
+                   jax.ShapeDtypeStruct((1, w), jnp.uint32)],
+        interpret=interpret,
+    )(packed)
+    return out, mask[0]
+
+
+def _raid_kernel(s_ref, o_ref):
+    stripes = s_ref[...]                         # [D, bw] uint32
+    acc = stripes[0]
+    for d in range(1, stripes.shape[0]):         # static fold
+        acc = acc ^ stripes[d]
+    o_ref[...] = acc[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "interpret"))
+def raid_xor(stripes: jax.Array, *, bw: int = 512,
+             interpret: bool = False) -> jax.Array:
+    """Reconstruct the lost stripe: XOR of survivors + parity.
+
+    stripes: uint32 [D, W] (row-major, untransposed - Sec. IV-C RAID).
+    """
+    d, w = stripes.shape
+    assert w % bw == 0
+    out = pl.pallas_call(
+        _raid_kernel,
+        grid=(w // bw,),
+        in_specs=[pl.BlockSpec((d, bw), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, bw), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, w), jnp.uint32),
+        interpret=interpret,
+    )(stripes)
+    return out[0]

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Each cell jits the real step function (train_step / prefill forward /
+serve decode_step) with shardings resolved from the logical rules,
+lowers against ShapeDtypeStruct inputs (no allocation), compiles for the
+production mesh, and records memory_analysis / cost_analysis / per-kind
+collective bytes into results/dryrun/<cell>.json - the roofline source.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import lm
+from ..models.common import Config
+from ..parallel import sharding as shd
+from ..train import optimizer as opt
+from ..train import step as train_step_mod
+from . import mesh as mesh_mod
+from . import shapes as shapes_mod
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# per-arch training-scale settings (see DESIGN.md §5): FSDP + microbatches
+# + int8 Adam second moment for the models that need them to fit 16GB/chip
+TRAIN_SETTINGS: Dict[str, Dict[str, Any]] = {
+    "arctic-480b": dict(fsdp=True, microbatches=8, int8_v=True,
+                        accum="bfloat16"),
+    # 8 experts < 16-wide data axis: shard expert weights over their
+    # embed/mlp dims instead (rules override), FSDP over data
+    "mixtral-8x7b": dict(fsdp=True, microbatches=8, int8_v=True,
+                         accum="bfloat16", rules={"expert": None}),
+    "gemma2-27b": dict(fsdp=True, microbatches=8, int8_v=False,
+                       accum="bfloat16"),
+    "gemma3-27b": dict(fsdp=True, microbatches=8, int8_v=False,
+                       accum="bfloat16"),
+    "starcoder2-7b": dict(fsdp=True, microbatches=4, int8_v=False),
+    "recurrentgemma-2b": dict(fsdp=False, microbatches=4, int8_v=False),
+    "paligemma-3b": dict(fsdp=False, microbatches=4, int8_v=False),
+}
+DEFAULT_TRAIN = dict(fsdp=False, microbatches=4, int8_v=False)
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op, by kind."""
+    out: Dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(2), m.group(3), m.group(4)
+        if m.group(5):  # -start of a start/done pair; count once
+            pass
+        nbytes = DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[kind] = out.get(kind, 0.0) + nbytes
+    return out
+
+
+def rules_for(arch: str, kind: str) -> Optional[dict]:
+    # FSDP archs shard params over (data x model) for every step kind -
+    # big models don't fit under pure tensor parallelism even at inference
+    st = TRAIN_SETTINGS.get(arch, DEFAULT_TRAIN)
+    rules = dict(st.get("rules") or {})
+    if st.get("fsdp"):
+        base = shd.ShardingConfig(fsdp=True).resolved()
+        base.update(rules)
+        return base
+    return rules or None
+
+
+def build_lowerable(arch: str, shape: str, mesh,
+                    quant_bits: Optional[int] = None):
+    """Returns (jitted_fn, args tuple of ShapeDtypeStructs)."""
+    spec = shapes_mod.input_specs(arch, shape, quant_bits=quant_bits)
+    cfg: Config = spec["cfg"]
+    kind = spec["kind"]
+    rules = rules_for(arch, kind)
+    shd.set_active_rules(rules)     # constrain() inside layers follows suit
+    st = TRAIN_SETTINGS.get(arch, DEFAULT_TRAIN)
+
+    if kind == "train":
+        tcfg = train_step_mod.TrainConfig(
+            adamw=opt.AdamWConfig(int8_second_moment=st.get("int8_v",
+                                                            False)),
+            microbatches=st.get("microbatches", 1),
+            accum_dtype=st.get("accum", "float32"),
+            unroll_accum=st.get("unroll", False))
+        state_structs = jax.eval_shape(
+            lambda: train_step_mod.init_state(jax.random.PRNGKey(0), cfg,
+                                              tcfg))
+        sspecs = shd.tree_specs(train_step_mod.state_specs(cfg, tcfg), rules)
+        bspecs = shd.tree_specs(
+            {k: ("batch", "seq") if v.ndim == 2 else ("batch", None, None)
+             for k, v in spec["batch"].items()}, rules)
+        state_sh = shd.shardings_pruned(mesh, sspecs, state_structs)
+        fn = jax.jit(
+            functools.partial(train_step_mod.train_step, cfg=cfg, tcfg=tcfg),
+            in_shardings=(state_sh,
+                          shd.shardings_pruned(mesh, bspecs, spec["batch"])),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+        return fn, (state_structs, spec["batch"])
+
+    params_structs = shapes_mod.param_structs(cfg)
+    pspecs = shd.tree_specs(lm.specs(cfg), rules)
+
+    if kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, aux = lm.forward(
+                params, batch["tokens"], cfg,
+                enc_inputs=batch.get("enc_inputs"),
+                prefix_embeddings=batch.get("prefix_embeddings"),
+                last_only=True)
+            return logits
+        bspecs = shd.tree_specs(
+            {k: ("batch", "seq") if v.ndim == 2 else ("batch", None, None)
+             for k, v in spec["batch"].items()}, rules)
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(
+                         shd.shardings_pruned(mesh, pspecs, params_structs),
+                         shd.shardings_pruned(mesh, bspecs, spec["batch"])))
+        return fn, (params_structs, spec["batch"])
+
+    # decode
+    stspecs = shd.tree_specs(lm.decode_state_specs(cfg), rules)
+    b = spec["batch"]
+
+    def decode_fn(params, token, states, index, ctx=None):
+        return lm.decode_step(params, token, states, index, cfg, ctx=ctx)
+
+    tok_sh = shd.shardings_pruned(
+        mesh, shd.spec_for(("batch", None), rules), b["token"])
+    in_sh = [shd.shardings_pruned(mesh, pspecs, params_structs), tok_sh,
+             shd.shardings_pruned(mesh, stspecs, b["states"]), None]
+    args = [params_structs, b["token"], b["states"], b["index"]]
+    if "ctx" in b:
+        in_sh.append(shd.shardings_pruned(
+            mesh, shd.spec_for(("batch", None, None), rules), b["ctx"]))
+        args.append(b["ctx"])
+    fn = jax.jit(decode_fn, in_shardings=tuple(in_sh), donate_argnums=(2,))
+    return fn, tuple(args)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             quant_bits: Optional[int] = None,
+             save: bool = True) -> Dict[str, Any]:
+    mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    shd.set_mesh_axes(mesh.axis_names)
+    t0 = time.time()
+    with mesh:
+        fn, args = build_lowerable(arch, shape, mesh, quant_bits=quant_bits)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_stats = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            }
+        except Exception as e:  # backend without memory_analysis
+            mem_stats = {"error": str(e)}
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed"))}
+        coll = collective_bytes(compiled.as_text())
+
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "n_chips": int(n_chips),
+        "quant_bits": quant_bits,
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "cost_analysis": cost,
+        "memory_analysis": mem_stats,
+        "collective_bytes": coll,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "ok": True,
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        tag = f"{arch}__{shape}__{mesh_kind}" + (
+            f"__w{quant_bits}" if quant_bits else "")
+        with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--quant", type=int, default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s) for a, s, skip in shapes_mod.cells() if not skip]
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in todo:
+        for mk in meshes:
+            try:
+                r = run_cell(arch, shape, mk, quant_bits=args.quant)
+                print(f"OK  {arch:18s} {shape:12s} {mk:6s} "
+                      f"flops={r['flops']:.3e} "
+                      f"coll={sum(r['collective_bytes'].values()):.3e}B "
+                      f"compile={r['compile_s']}s", flush=True)
+                print("  memory:", r["memory_analysis"], flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {arch} {shape} {mk}: {type(e).__name__}: "
+                      f"{str(e)[:300]}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

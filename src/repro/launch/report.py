@@ -1,0 +1,142 @@
+DOC = """Assemble EXPERIMENTS.md tables from results/{dryrun,roofline}/*.json.
+
+Adds the per-cell "useful-work" yardsticks that the raw roofline terms
+need for a score:
+  * compute yardstick: MODEL_FLOPS = 6*N_active*D (3x fwd for training)
+  * memory yardstick: MODEL_BYTES = params (read once per step) + decode
+    state traffic - the floor on HBM bytes
+  * roofline fraction = yardstick_time(dominant resource) / bound_time -
+    how close the compiled step is to the best possible step on the
+    dominant resource.
+"""
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results")
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _param_bytes(arch: str, quant_bits: Optional[int] = None) -> int:
+    import jax
+    from .. import configs
+    from ..models import lm
+    cfg = configs.get(arch, quant_bits=quant_bits)
+    structs = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(structs))
+
+
+def _state_bytes(arch: str, shape: str) -> int:
+    import jax
+    from .. import configs
+    from ..models import lm
+    from . import shapes as shapes_mod
+    cfg = configs.get(arch)
+    case = shapes_mod.SHAPES[shape]
+    structs = jax.eval_shape(
+        lambda: lm.decode_state_init(cfg, case.global_batch, case.seq_len))
+    return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(structs))
+
+
+def model_bytes_per_chip(arch: str, shape: str, n_chips: int,
+                         quant_bits: Optional[int] = None,
+                         train: bool = False) -> float:
+    """Floor on HBM traffic per chip per step.
+
+    train: params+opt state r/w (~6x params) + the residual-stream floor
+    (each layer reads and writes the [tokens, d_model] stream at least
+    once in fwd and once in bwd, and remat re-runs fwd: ~6 passes) -
+    anything less would require fusing whole layers end to end.
+    """
+    from .. import configs
+    from . import shapes as shapes_mod
+    pb = _param_bytes(arch, quant_bits)
+    if train:
+        cfg = configs.get(arch)
+        case = shapes_mod.SHAPES[shape]
+        tokens = case.global_batch * case.seq_len
+        act = tokens * cfg.d_model * 2 * 2 * cfg.n_layers * 3
+        return (6.0 * pb + act) / n_chips
+    sb = _state_bytes(arch, shape)
+    return (pb + sb) / n_chips
+
+
+def load(kind: str) -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, kind, "*.json"))):
+        with open(path) as f:
+            out[os.path.basename(path)[:-5]] = json.load(f)
+    return out
+
+
+def roofline_table() -> str:
+    """Score definition (see EXPERIMENTS.md §Roofline):
+
+    * train/prefill cells are compute/collective-bound on real hardware;
+      the op-level memory sum is fusion-inflated (diagnostic only), so
+      score = MODEL_FLOPS_time / max(compute_s, collective_s).
+    * decode cells are genuinely memory-bound;
+      score = MODEL_BYTES_time / memory_s.
+    """
+    rows = []
+    cells = load("roofline")
+    header = ("| arch | shape | compute_s | memory_s(diag) | collective_s "
+              "| bound kind | useful-FLOP frac | roofline frac |\n"
+              "|---|---|---|---|---|---|---|---|")
+    for tag, r in cells.items():
+        if r.get("rules_tag") or r.get("quant_bits"):
+            continue
+        train = r["shape"].startswith("train")
+        decode = r["shape"].startswith(("decode", "long"))
+        mb = model_bytes_per_chip(r["arch"], r["shape"], r["n_chips"],
+                                  train=train)
+        mem_yard = mb / HBM_BW
+        comp_yard = r["model_flops_per_chip"] / PEAK_FLOPS
+        if decode:
+            bound, yard, kind = r["memory_s"], mem_yard, "memory"
+        else:
+            bound = max(r["compute_s"], r["collective_s"])
+            yard = comp_yard
+            kind = ("collective" if r["collective_s"] > r["compute_s"]
+                    else "compute")
+        frac = min(1.0, yard / bound) if bound else 0.0
+        rows.append((r["arch"], r["shape"], r["compute_s"], r["memory_s"],
+                     r["collective_s"], kind, r["useful_flops_frac"], frac))
+    rows.sort()
+    lines = [header]
+    for a, s, c, m, co, dom, uf, fr in rows:
+        lines.append(f"| {a} | {s} | {c:.4g} | {m:.4g} | {co:.4g} | {dom} "
+                     f"| {uf:.1%} | {fr:.1%} |")
+    return "\n".join(lines)
+
+
+def dryrun_table() -> str:
+    cells = load("dryrun")
+    header = ("| arch | shape | mesh | FLOPs/chip | HBM GB/chip "
+              "| collective MB/chip | compile s |\n|---|---|---|---|---|---|---|")
+    lines = [header]
+    for tag, r in sorted(cells.items()):
+        mem = r.get("memory_analysis", {})
+        hbm = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 1e9
+        coll = sum(r.get("collective_bytes", {}).values()) / 1e6
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops']:.3g} | {hbm:.1f} | {coll:.1f} "
+            f"| {r.get('compile_s', 0)} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+DOC = """Roofline analysis from the compiled dry-run (v5e targets).
+
+XLA's cost_analysis counts while-loop (scan) bodies ONCE regardless of
+trip count, so totals from the production (scanned) lowering under-count
+by the trip counts - and differencing scanned depths is useless (the body
+is the same program).  We therefore lower each cell twice at reduced
+depth with the layer stack UNROLLED (scan_layers=False, microbatches=1):
+straight-line code is counted exactly, so
+  delta = cost(3 groups) - cost(2 groups)   is one group's true cost and
+  total = cost(2g) + (n_groups_full - 2 + n_rem/len(pattern)) * delta.
+The production dry-run (launch/dryrun.py) keeps the scanned form - that
+one proves compilability and memory fit; this one prices it.
+Microbatch scans are lowered at microbatches=1 for analysis (identical
+per-step totals).  Collective bytes difference the same way.
+
+Terms per (arch x shape), single-pod 256-chip mesh, per chip:
+  compute_s    = FLOPs / 197e12      (bf16 peak)
+  memory_s     = bytes_accessed / 819e9
+  collective_s = sum_kind bytes * ring_factor(kind) / 50e9
+ring_factor: all-reduce 2x (reduce-scatter + all-gather), others 1x; the
+(n-1)/n ring terms are folded into the 50 GB/s effective-link assumption.
+
+Writes results/roofline/<cell>.json; `report()` renders the EXPERIMENTS.md
+tables.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+
+from .. import configs
+from ..models.common import Config
+from ..parallel import sharding as shd
+from . import dryrun as dr
+from . import mesh as mesh_mod
+from . import shapes as shapes_mod
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "roofline")
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _lower_costs(arch: str, shape: str, mesh, n_layers: int,
+                 quant_bits: Optional[int], overrides: Dict[str, Any],
+                 n_micro: Optional[int] = None,
+                 batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Lower+compile a depth/microbatch-reduced cell; per-device costs."""
+    import repro.configs as cfgs
+    overrides = dict(overrides, scan_layers=False)
+
+    # monkey-wire the reduced cfg through dryrun's builder
+    orig_get = cfgs.get
+
+    def patched_get(name, quant_bits=None, **kw):
+        c = orig_get(name, quant_bits=quant_bits, **kw)
+        if name == arch:
+            c = dataclasses.replace(c, n_layers=n_layers, **overrides)
+        return c
+
+    cfgs.get = patched_get
+    saved_case = shapes_mod.SHAPES[shape]
+    saved_st = dr.TRAIN_SETTINGS.get(arch)
+    try:
+        if batch_override is not None:
+            shapes_mod.SHAPES[shape] = dataclasses.replace(
+                saved_case, global_batch=batch_override)
+        if n_micro is not None:
+            st = dict(saved_st or dr.DEFAULT_TRAIN)
+            st["microbatches"] = n_micro
+            st["unroll"] = True
+            dr.TRAIN_SETTINGS[arch] = st
+        fn, args = dr.build_lowerable(arch, shape, mesh,
+                                      quant_bits=quant_bits)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    finally:
+        cfgs.get = orig_get
+        shapes_mod.SHAPES[shape] = saved_case
+        if saved_st is None:
+            dr.TRAIN_SETTINGS.pop(arch, None)
+        else:
+            dr.TRAIN_SETTINGS[arch] = saved_st
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": dr.collective_bytes(compiled.as_text()),
+    }
+
+
+def _combine(base: Dict, delta: Dict, mult: float) -> Dict:
+    out = {
+        "flops": base["flops"] + mult * delta["flops"],
+        "bytes": base["bytes"] + mult * delta["bytes"],
+    }
+    kinds = set(base["coll"]) | set(delta["coll"])
+    out["coll"] = {k: base["coll"].get(k, 0.0)
+                   + mult * delta["coll"].get(k, 0.0) for k in kinds}
+    return out
+
+
+def model_flops(cfg: Config, tokens: int, kind: str) -> float:
+    """6*N_active*D reference FLOPs (the 'useful compute' yardstick)."""
+    n_active = 0
+    for mixer, f in cfg.layer_kinds():
+        d, hd = cfg.d_model, cfg.hd
+        if mixer in ("global", "local", "bidir", "cross_global"):
+            n_active += d * hd * (cfg.n_heads * 2 + cfg.kv_heads * 2)
+            if mixer == "cross_global":
+                n_active += d * hd * (cfg.n_heads * 2 + cfg.kv_heads * 2)
+        elif mixer == "mlstm":
+            n_active += d * hd * cfg.n_heads * 4 + 2 * d * cfg.n_heads
+        elif mixer == "slstm":
+            n_active += d * hd * cfg.n_heads * 4 * 2
+        elif mixer == "rglru":
+            w = cfg.lru_width or d
+            n_active += 2 * d * w + 2 * w * w + cfg.conv_width * w
+        if f == "mlp":
+            n_active += 3 * d * cfg.d_ff
+        elif f in ("moe", "moe_dense"):
+            n_active += 3 * d * cfg.d_ff * cfg.top_k + d * cfg.n_experts
+            if f == "moe_dense":
+                n_active += 3 * d * cfg.d_ff
+    n_active += cfg.vocab * cfg.d_model          # lm head
+    mult = 3.0 if kind == "train" else 1.0       # fwd+bwd = 3x fwd
+    return 2.0 * n_active * tokens * mult
+
+
+def analyze_cell(arch: str, shape: str, quant_bits: Optional[int] = None,
+                 overrides: Optional[Dict[str, Any]] = None,
+                 rules_tag: str = "", save: bool = True) -> Dict[str, Any]:
+    overrides = dict(overrides or {})
+    mesh = mesh_mod.make_production_mesh(multi_pod=False)
+    shd.set_mesh_axes(mesh.axis_names)
+    cfg = configs.get(arch)
+    case = shapes_mod.SHAPES[shape]
+    plen = len(cfg.pattern)
+    n_groups_full, n_rem = divmod(cfg.n_layers, plen)
+
+    case = shapes_mod.SHAPES[shape]
+    st = dict(dr.TRAIN_SETTINGS.get(arch, dr.DEFAULT_TRAIN))
+    kind = case.kind
+    g_full = n_groups_full + n_rem / plen
+    t0 = time.time()
+
+    # the layer stack is UNROLLED in analysis lowerings, so depth-1 points
+    # are counted correctly (no trip-1 while-loop hazard) - use the
+    # cheapest valid grid: G in {1,2}, M in {2,3}
+    G1, G2 = 1, 2
+    with mesh:
+        if kind == "train" and st.get("microbatches", 1) > 1:
+            # cost(G, M) = a + bG + cM + dGM  (layers x microbatches are
+            # bilinear: per-layer-per-micro work like FSDP weight gathers
+            # lives in d).  Lower 4 small points at *production*
+            # per-microbatch shapes and extrapolate.
+            m_prod = st["microbatches"]
+            M1, M2 = 2, 3
+            per_micro = case.global_batch // m_prod
+
+            def pt(g, m):
+                return _lower_costs(arch, shape, mesh, g * plen, quant_bits,
+                                    overrides, n_micro=m,
+                                    batch_override=per_micro * m)
+
+            cA, cB = pt(G1, M1), pt(G2, M1)
+            cC, cD = pt(G1, M2), pt(G2, M2)
+
+            def fit(get):
+                vA, vB, vC, vD = get(cA), get(cB), get(cC), get(cD)
+                d = (vD - vB - vC + vA) / ((G2 - G1) * (M2 - M1))
+                b = (vB - vA) / (G2 - G1) - d * M1
+                c = (vC - vA) / (M2 - M1) - d * G1
+                a = vA - b * G1 - c * M1 - d * G1 * M1
+                return max(a + b * g_full + c * m_prod
+                           + d * g_full * m_prod, 0.0)
+
+            kinds = (set(cA["coll"]) | set(cB["coll"]) | set(cC["coll"])
+                     | set(cD["coll"]))
+            total = {
+                "flops": fit(lambda x: x["flops"]),
+                "bytes": fit(lambda x: x["bytes"]),
+                "coll": {k: fit(lambda x, k=k: x["coll"].get(k, 0.0))
+                         for k in kinds},
+            }
+        else:
+            c1 = _lower_costs(arch, shape, mesh, G1 * plen, quant_bits,
+                              overrides)
+            c2 = _lower_costs(arch, shape, mesh, G2 * plen, quant_bits,
+                              overrides)
+            delta = {"flops": max(c2["flops"] - c1["flops"], 0.0),
+                     "bytes": max(c2["bytes"] - c1["bytes"], 0.0),
+                     "coll": {k: max(c2["coll"].get(k, 0.0)
+                                     - c1["coll"].get(k, 0.0), 0.0)
+                              for k in set(c1["coll"]) | set(c2["coll"])}}
+            total = _combine(c1, delta, g_full - 1)
+
+    compute_s = total["flops"] / PEAK_FLOPS
+    memory_s = total["bytes"] / HBM_BW
+    coll_s = sum(v * RING_FACTOR.get(k, 1.0)
+                 for k, v in total["coll"].items()) / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])[0]
+
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+    elif case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+    else:
+        tokens = case.global_batch                # 1 new token each
+    n_chips = int(mesh.devices.size)
+    mflops = model_flops(configs.get(arch), tokens,
+                         case.kind) / n_chips     # per chip
+    bound = max(compute_s, memory_s, coll_s)
+    result = {
+        "arch": arch, "shape": shape, "quant_bits": quant_bits,
+        "rules_tag": rules_tag, "overrides": {k: str(v) for k, v
+                                              in overrides.items()},
+        "n_chips": n_chips,
+        "flops_per_chip": total["flops"],
+        "bytes_per_chip": total["bytes"],
+        "collective_bytes_per_chip": total["coll"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "step_time_lower_bound_s": bound,
+        "model_flops_per_chip": mflops,
+        "useful_flops_frac": (mflops / total["flops"]
+                              if total["flops"] else 0.0),
+        "roofline_frac": ((mflops / PEAK_FLOPS) / bound) if bound else 0.0,
+        "analysis_s": round(time.time() - t0, 1),
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        tag = f"{arch}__{shape}" + (f"__w{quant_bits}" if quant_bits else "")
+        tag += f"__{rules_tag}" if rules_tag else ""
+        with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--quant", type=int, default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    todo = ([(a, s) for a, s, skip in shapes_mod.cells() if not skip]
+            if args.all else [(args.arch, args.shape)])
+    fails = 0
+    for arch, shape in todo:
+        try:
+            r = analyze_cell(arch, shape, quant_bits=args.quant)
+            print(f"{arch:18s} {shape:12s} comp={r['compute_s']:.4f}s "
+                  f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                  f"dom={r['dominant']:10s} "
+                  f"roofline={r['roofline_frac']:.2%}", flush=True)
+        except Exception as e:
+            fails += 1
+            print(f"FAIL {arch} {shape}: {type(e).__name__}: {str(e)[:300]}",
+                  flush=True)
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Assigned input shapes x architectures: the 40-cell dry-run matrix.
+
+Each cell provides ShapeDtypeStruct stand-ins for every input of the step
+being lowered - no device allocation ever happens here.
+
+  train_4k     seq 4096   global_batch 256   -> train_step
+  prefill_32k  seq 32768  global_batch 32    -> prefill forward
+  decode_32k   seq 32768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288 global_batch 1     -> serve_step (1 new token)
+
+long_500k runs only for sub-quadratic archs (SSM / hybrid / sliding-window
+local attention); pure full-attention archs skip it (DESIGN.md §4).
+Encoder-only archs would skip decode shapes; all ten assigned archs here
+are decoder-bearing, so only the long_500k rule filters cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import lm
+from ..models.common import Config
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+# archs with bounded-memory token mixing (recurrent state or sliding
+# window); pure full-attention archs skip long_500k (see DESIGN.md)
+SUB_QUADRATIC = {"xlstm-1.3b", "mixtral-8x7b", "gemma2-27b", "gemma3-27b",
+                 "recurrentgemma-2b"}
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells honoring the long_500k rule."""
+    out = []
+    for arch in configs.ARCHS:
+        for sname in SHAPES:
+            skip = sname == "long_500k" and arch not in SUB_QUADRATIC
+            if include_skipped or not skip:
+                out.append((arch, sname, skip))
+    return out
+
+
+def _token_struct(b: int, s: int) -> SDS:
+    return SDS((b, s), jnp.int32)
+
+
+def input_specs(arch: str, shape: str, quant_bits: Optional[int] = None
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every input of the lowered step.
+
+    Returns {"cfg", "kind", "batch": {...}} where batch matches the step's
+    signature: train -> {tokens, labels [+ enc_inputs/prefix_embeddings]};
+    prefill -> same minus labels; decode -> {token, states, index}.
+    """
+    cfg = configs.get(arch, quant_bits=quant_bits)
+    case = SHAPES[shape]
+    b, s = case.global_batch, case.seq_len
+    out: Dict[str, Any] = {"cfg": cfg, "kind": case.kind}
+    adtype = cfg.adtype
+
+    if case.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": _token_struct(b, s)}
+        if case.kind == "train":
+            batch["labels"] = _token_struct(b, s)
+        if cfg.family == "encdec":
+            batch["enc_inputs"] = SDS((b, cfg.frontend_len, cfg.d_model),
+                                      adtype)
+        elif cfg.frontend == "vision_stub":
+            batch["prefix_embeddings"] = SDS(
+                (b, cfg.frontend_len, cfg.d_model), adtype)
+        out["batch"] = batch
+    else:
+        states = jax.eval_shape(
+            lambda: lm.decode_state_init(cfg, b, s))
+        batch = {"token": _token_struct(b, 1), "states": states,
+                 "index": SDS((), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["ctx"] = SDS((b, cfg.frontend_len, cfg.d_model), adtype)
+        out["batch"] = batch
+    return out
+
+
+def param_structs(cfg: Config) -> Any:
+    """abstract param tree (ShapeDtypeStructs) without allocating."""
+    return jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,86 @@
+DOC = """Production training launcher.
+
+On a real multi-pod TPU fleet every host runs this same script (JAX
+multi-process); here it also runs single-host for development:
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 100 --reduced --batch 16 --seq 128
+
+Flags mirror the dry-run settings: --fsdp, --microbatches, --int8-v,
+--compress-pods (int8 gradient all-reduce over the pod axis).  The loop
+auto-resumes from the newest valid checkpoint (see train/loop.py for the
+failure model).
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--int8-v", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--quant", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed multi-process init")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.mesh != "host":
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512 "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_processes,
+                                   args.process_id)
+
+    from repro import configs
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import common
+    from repro.parallel import sharding as shd
+    from repro.train import loop as loop_mod
+    from repro.train import optimizer as opt
+    from repro.train import step as step_mod
+    from . import mesh as mesh_mod
+
+    cfg = configs.get(args.arch, quant_bits=args.quant)
+    if args.reduced:
+        cfg = common.reduced(cfg, vocab=512, d_model=128, d_ff=256,
+                             n_layers=max(len(cfg.pattern), 2))
+    if args.mesh == "host":
+        mesh = mesh_mod.make_host_mesh()
+    else:
+        mesh = mesh_mod.make_production_mesh(multi_pod=args.mesh == "multi")
+    shd.set_mesh_axes(mesh.axis_names)
+    rules = shd.ShardingConfig(fsdp=args.fsdp).resolved() if args.fsdp \
+        else None
+    tcfg = step_mod.TrainConfig(
+        adamw=opt.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
+                              total_steps=args.steps,
+                              int8_second_moment=args.int8_v),
+        microbatches=args.microbatches)
+    lcfg = loop_mod.LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, global_batch=args.batch,
+                                  seq_len=args.seq))
+    with mesh:
+        trainer = loop_mod.Trainer(cfg, tcfg, lcfg, data, mesh=mesh,
+                                   rules=rules)
+        state = trainer.init_or_restore()
+        state = trainer.run(state)
+    print(f"finished at step {int(state['step'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Composable model definitions: layers, recurrent mixers, LM assembly."""
+from . import attention, common, ffn, lm, recurrent
+from .common import Config, reduced

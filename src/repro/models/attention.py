@@ -1,0 +1,243 @@
+"""Attention layers: GQA/MQA, RoPE, sliding-window, softcap, cross-attn,
+and single-token decode against a (sequence-shardable) KV cache."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import common as cm
+from .common import Config, Params
+
+
+def init(key, cfg: Config, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 5)
+    qz = cfg.quant_bits is not None
+    p = {
+        "wq": cm._init_dense(ks[0], cfg.d_model, cfg.n_heads * cfg.hd, cfg, qz),
+        "wk": cm._init_dense(ks[1], cfg.d_model, cfg.kv_heads * cfg.hd, cfg, qz),
+        "wv": cm._init_dense(ks[2], cfg.d_model, cfg.kv_heads * cfg.hd, cfg, qz),
+        "wo": cm._init_dense(ks[3], cfg.n_heads * cfg.hd, cfg.d_model, cfg, qz),
+    }
+    if cfg.qk_norm:
+        p["qn"] = cm.rmsnorm_init(cfg.hd)
+        p["kn"] = cm.rmsnorm_init(cfg.hd)
+    return p
+
+
+def specs(cfg: Config) -> Params:
+    qz = cfg.quant_bits is not None
+    s = {
+        "wq": cm._dense_specs("embed", "heads", cfg, qz),
+        "wk": cm._dense_specs("embed", "kv_heads", cfg, qz),
+        "wv": cm._dense_specs("embed", "kv_heads", cfg, qz),
+        "wo": cm._dense_specs("heads", "embed", cfg, qz),
+    }
+    if cfg.qk_norm:
+        s["qn"] = {"g": (None,)}
+        s["kn"] = {"g": (None,)}
+    return s
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qkv(params, x, cfg: Config, positions, rope_on: bool = True):
+    b, s, _ = x.shape
+    q = _split_heads(cm.linear(params["wq"], x, cfg), cfg.n_heads, cfg.hd)
+    k = _split_heads(cm.linear(params["wk"], x, cfg), cfg.kv_heads, cfg.hd)
+    v = _split_heads(cm.linear(params["wv"], x, cfg), cfg.kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = cm.rmsnorm(params["qn"], q, cfg.norm_eps)
+        k = cm.rmsnorm(params["kn"], k, cfg.norm_eps)
+    if rope_on:
+        q = cm.rope(q, positions, cfg.rope_theta)
+        k = cm.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: Config):
+    """q: [B,S,Hq,D]; k,v: [B,T,Hkv,D]; mask: [B,1,S,T] or [S,T] bool.
+
+    Operands stay in their storage dtype (bf16 cache is read as bf16);
+    the MXU accumulates in f32 via preferred_element_type - §Perf cell A
+    showed that casting operands up front doubles the HBM bytes of the
+    decode step by materializing an f32 copy of the KV cache.
+    """
+    groups = cfg.n_heads // k.shape[2]
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, s, k.shape[2], groups, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    logits = cm.softcap(logits, cfg.attn_softcap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        else:
+            mask = mask[:, None, :, :][:, :, None]     # [B,1,1,S,T]
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, hq, d)
+
+
+def causal_mask(s: int, window: int = 0, prefix_len: int = 0):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window:
+        m = m & (j > i - window)
+    if prefix_len:
+        m = m | (j < prefix_len)                      # bidirectional prefix
+    return m
+
+
+# -- chunked attention (XLA "flash"): bounded memory for long sequences ------
+
+DENSE_MAX_SEQ = 1024       # below this, plain dense attention is cheapest
+
+
+def _attn_chunked(q, k, v, cfg: Config, *, kind: str, prefix_len: int = 0):
+    """Q-chunked attention: scan over query chunks, each against its exact
+    KV range - O(chunk x T) live memory for global, O(W x 2W) for local
+    (banded: a window-W chunk attends to itself + the previous chunk, so
+    local-attention FLOPs stay linear in sequence length).
+    """
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    if kind == "local":
+        w = min(cfg.window, s)
+        cq = w
+        nq = s // cq
+        if nq * cq != s or nq < 2:
+            mask = causal_mask(s, window=cfg.window, prefix_len=prefix_len)
+            return _sdpa(q, k, v, mask, cfg)
+        # pad keys with one window in front: chunk i reads [iW, iW+2W)
+        kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+
+        def chunk(i, qi):
+            ks = jax.lax.dynamic_slice_in_dim(kp, i * cq, 2 * w, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, i * cq, 2 * w, axis=1)
+            qpos = i * cq + jnp.arange(cq)
+            kpos = i * cq - w + jnp.arange(2 * w)
+            m = ((kpos[None, :] <= qpos[:, None])
+                 & (kpos[None, :] > qpos[:, None] - cfg.window)
+                 & (kpos[None, :] >= 0))
+            return _sdpa(qi, ks, vs, m, cfg)
+    else:
+        cq = min(512, s)
+        nq = s // cq
+        if nq * cq != s or nq < 2:
+            m = None if kind == "bidir" else causal_mask(
+                s, prefix_len=prefix_len)
+            return _sdpa(q, k, v, m, cfg)
+
+        def chunk(i, qi):
+            qpos = i * cq + jnp.arange(cq)
+            kpos = jnp.arange(t)
+            if kind == "bidir":
+                m = jnp.ones((cq, t), bool)
+            else:
+                m = kpos[None, :] <= qpos[:, None]
+                if prefix_len:
+                    m = m | (kpos[None, :] < prefix_len)
+            return _sdpa(qi, k, v, m, cfg)
+
+    qs = q.reshape(b, nq, cq, hq, d).transpose(1, 0, 2, 3, 4)
+
+    def body(_, inp):
+        i, qi = inp
+        return None, chunk(i, qi)
+
+    _, ys = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, d)
+
+
+def apply(params: Params, x: jax.Array, cfg: Config, *, kind: str,
+          positions: Optional[jax.Array] = None,
+          prefix_len: int = 0) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions, rope_on=True)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    if s > DENSE_MAX_SEQ:
+        out = _attn_chunked(q, k, v, cfg, kind=kind, prefix_len=prefix_len)
+    else:
+        if kind == "bidir":
+            mask = None
+        elif kind == "local":
+            mask = causal_mask(s, window=cfg.window, prefix_len=prefix_len)
+        else:
+            mask = causal_mask(s, prefix_len=prefix_len)
+        out = _sdpa(q, k, v, mask, cfg)
+    out = constrain(out, ("batch", "seq", "heads", None))
+    return cm.linear(params["wo"], out.reshape(b, s, -1), cfg)
+
+
+def apply_cross(params: Params, x: jax.Array, ctx: jax.Array,
+                cfg: Config) -> jax.Array:
+    """Cross-attention (decoder queries over encoder output)."""
+    b, s, _ = x.shape
+    q = _split_heads(cm.linear(params["wq"], x, cfg), cfg.n_heads, cfg.hd)
+    k = _split_heads(cm.linear(params["wk"], ctx, cfg), cfg.kv_heads, cfg.hd)
+    v = _split_heads(cm.linear(params["wv"], ctx, cfg), cfg.kv_heads, cfg.hd)
+    out = _sdpa(q, k, v, None, cfg)
+    return cm.linear(params["wo"], out.reshape(b, s, -1), cfg)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: Config, batch: int, max_len: int, kind: str,
+               dtype=None) -> Dict[str, jax.Array]:
+    """KV cache for one attention layer.
+
+    Local layers keep only a window-sized ring; global layers keep max_len.
+    Layout [B, T, H_kv, D] - the T axis is sharded over `model`
+    (flash-decoding style) via the cache_seq rule.
+    """
+    dtype = dtype or cfg.adtype
+    t = min(cfg.window, max_len) if kind == "local" else max_len
+    shape = (batch, t, cfg.kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(kind: str) -> Dict[str, tuple]:
+    ax = ("batch", "cache_seq", "kv_heads", None)
+    return {"k": ax, "v": ax}
+
+
+def decode_step(params: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                index: jax.Array, cfg: Config, *, kind: str
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode: x [B, 1, D], cache k/v [B, T, Hkv, D].
+
+    `index` is the absolute position of the new token; local layers write
+    the ring slot index % window.  Attention runs over the full cache with
+    validity masking - on a sharded cache T-axis each shard computes its
+    partial softmax and XLA combines (flash-decoding when shard_mapped).
+    """
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    slot = index % t if kind == "local" else index
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(
+        cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(
+        cache["v"].dtype), (0, slot, 0, 0))
+    # validity: slots beyond `index` are empty (ring slots wrap for local)
+    j = jnp.arange(t)[None, None, :]
+    valid = (j <= index) | jnp.zeros((b, 1, t), bool)
+    out = _sdpa(q, k, v, valid, cfg)
+    out = cm.linear(params["wo"], out.reshape(b, 1, -1), cfg)
+    return out, {"k": k, "v": v}

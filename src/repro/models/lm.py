@@ -1,0 +1,461 @@
+"""LM assembly: layer units -> scanned group stacks -> full models.
+
+A *layer* is (mixer, ffn) from cfg.pattern; a *group* is one full pattern
+repetition.  Groups are homogeneous, so their params stack on a leading
+"layers" axis and the stack applies under `lax.scan` (compact HLO - vital
+for 62-layer models compiled for 512 devices).  `n_layers % len(pattern)`
+remainder layers get unstacked params applied after the scan.
+
+Decode threads a per-layer state (KV cache for attention kinds, recurrent
+state for mlstm/slstm/rglru) through the same group structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import attention as attn
+from . import common as cm
+from . import ffn as ffn_mod
+from . import recurrent as rec
+from .common import Config, Params
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: Config, kinds: Tuple[str, str]) -> Params:
+    mixer, f = kinds
+    ks = jax.random.split(key, 4)
+    p: Params = {"n1": cm.rmsnorm_init(cfg.d_model)}
+    if mixer in ("global", "local", "bidir"):
+        p["mix"] = attn.init(ks[0], cfg)
+    elif mixer == "cross_global":
+        p["mix"] = attn.init(ks[0], cfg)
+        p["cross"] = attn.init(ks[3], cfg)
+        p["nc"] = cm.rmsnorm_init(cfg.d_model)
+    elif mixer == "mlstm":
+        p["mix"] = rec.mlstm_init(ks[0], cfg)
+    elif mixer == "slstm":
+        p["mix"] = rec.slstm_init(ks[0], cfg)
+    elif mixer == "rglru":
+        p["mix"] = rec.rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if f != "none":
+        p["n2"] = cm.rmsnorm_init(cfg.d_model)
+    if f == "mlp":
+        p["ffn"] = ffn_mod.mlp_init(ks[1], cfg)
+    elif f == "moe":
+        p["ffn"] = ffn_mod.moe_init(ks[1], cfg)
+    elif f == "moe_dense":                     # arctic: MoE + dense residual
+        p["ffn"] = ffn_mod.moe_init(ks[1], cfg)
+        p["ffn_dense"] = ffn_mod.mlp_init(ks[2], cfg)
+    return p
+
+
+def layer_specs(cfg: Config, kinds: Tuple[str, str]) -> Params:
+    mixer, f = kinds
+    s: Params = {"n1": {"g": (None,)}}
+    if mixer in ("global", "local", "bidir"):
+        s["mix"] = attn.specs(cfg)
+    elif mixer == "cross_global":
+        s["mix"] = attn.specs(cfg)
+        s["cross"] = attn.specs(cfg)
+        s["nc"] = {"g": (None,)}
+    elif mixer == "mlstm":
+        s["mix"] = rec.mlstm_specs(cfg)
+    elif mixer == "slstm":
+        s["mix"] = rec.slstm_specs(cfg)
+    elif mixer == "rglru":
+        s["mix"] = rec.rglru_specs(cfg)
+    if f != "none":
+        s["n2"] = {"g": (None,)}
+    if f in ("mlp",):
+        s["ffn"] = ffn_mod.mlp_specs(cfg)
+    elif f == "moe":
+        s["ffn"] = ffn_mod.moe_specs(cfg)
+    elif f == "moe_dense":
+        s["ffn"] = ffn_mod.moe_specs(cfg)
+        s["ffn_dense"] = ffn_mod.mlp_specs(cfg)
+    return s
+
+
+def _ffn_block(p: Params, x, cfg: Config, f: str):
+    aux = jnp.zeros((), jnp.float32)
+    if f == "none":
+        return x, aux
+    h = cm.rmsnorm(p["n2"], x, cfg.norm_eps)
+    if f == "mlp":
+        y = ffn_mod.mlp_apply(p["ffn"], h, cfg)
+    elif f == "moe":
+        y, aux = ffn_mod.moe_apply(p["ffn"], h, cfg)
+    elif f == "moe_dense":
+        y, aux = ffn_mod.moe_apply(p["ffn"], h, cfg)
+        y = y + ffn_mod.mlp_apply(p["ffn_dense"], h, cfg)
+    return x + y, aux
+
+
+def layer_apply(p: Params, x, cfg: Config, kinds: Tuple[str, str], *,
+                ctx=None, prefix_len: int = 0):
+    mixer, f = kinds
+    h = cm.rmsnorm(p["n1"], x, cfg.norm_eps)
+    if mixer in ("global", "local", "bidir"):
+        y = attn.apply(p["mix"], h, cfg, kind=mixer, prefix_len=prefix_len)
+    elif mixer == "cross_global":
+        y = attn.apply(p["mix"], h, cfg, kind="global")
+        x = x + y
+        hc = cm.rmsnorm(p["nc"], x, cfg.norm_eps)
+        y = attn.apply_cross(p["cross"], hc, ctx, cfg)
+    elif mixer == "mlstm":
+        y = rec.mlstm_apply(p["mix"], h, cfg)
+    elif mixer == "slstm":
+        y = rec.slstm_apply(p["mix"], h, cfg)
+    elif mixer == "rglru":
+        y = rec.rglru_apply(p["mix"], h, cfg)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "embed"))
+    return _ffn_block(p, x, cfg, f)
+
+
+# -- decode ------------------------------------------------------------------
+
+def layer_state_init(cfg: Config, batch: int, max_len: int,
+                     kinds: Tuple[str, str]) -> Params:
+    mixer, _ = kinds
+    if mixer in ("global", "local", "cross_global"):
+        kind = "local" if mixer == "local" else "global"
+        return attn.init_cache(cfg, batch, max_len, kind)
+    if mixer == "mlstm":
+        return rec.mlstm_state_init(cfg, batch)
+    if mixer == "slstm":
+        return rec.slstm_state_init(cfg, batch)
+    if mixer == "rglru":
+        return rec.rglru_state_init(cfg, batch)
+    raise ValueError(mixer)
+
+
+def layer_state_specs(cfg: Config, kinds: Tuple[str, str]) -> Params:
+    mixer, _ = kinds
+    if mixer in ("global", "local", "cross_global"):
+        return attn.cache_specs("local" if mixer == "local" else "global")
+    if mixer == "mlstm":
+        return rec.mlstm_state_specs()
+    if mixer == "slstm":
+        return rec.slstm_state_specs()
+    if mixer == "rglru":
+        return rec.rglru_state_specs()
+    raise ValueError(mixer)
+
+
+def layer_decode(p: Params, x, state: Params, index, cfg: Config,
+                 kinds: Tuple[str, str], *, ctx=None):
+    mixer, f = kinds
+    h = cm.rmsnorm(p["n1"], x, cfg.norm_eps)
+    if mixer in ("global", "local"):
+        y, state = attn.decode_step(p["mix"], h, state, index, cfg,
+                                    kind=mixer)
+    elif mixer == "cross_global":
+        y, state = attn.decode_step(p["mix"], h, state, index, cfg,
+                                    kind="global")
+        x = x + y
+        hc = cm.rmsnorm(p["nc"], x, cfg.norm_eps)
+        y = attn.apply_cross(p["cross"], hc, ctx, cfg)
+    elif mixer == "mlstm":
+        y, state = rec.mlstm_decode(p["mix"], h, state, cfg)
+    elif mixer == "slstm":
+        y, state = rec.slstm_apply(p["mix"], h, cfg, state=state,
+                                   return_state=True)
+    elif mixer == "rglru":
+        y, state = rec.rglru_decode(p["mix"], h, state, cfg)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    x, _ = _ffn_block(p, x, cfg, f)
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# stacks (scanned groups + remainder)
+# ---------------------------------------------------------------------------
+
+def _group_init(key, cfg: Config, pattern) -> Params:
+    ks = jax.random.split(key, len(pattern))
+    return {f"l{i}": layer_init(ks[i], cfg, pattern[i])
+            for i in range(len(pattern))}
+
+
+def _group_apply(p: Params, x, cfg: Config, pattern, ctx=None,
+                 prefix_len: int = 0):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kinds in enumerate(pattern):
+        x, a = layer_apply(p[f"l{i}"], x, cfg, kinds, ctx=ctx,
+                           prefix_len=prefix_len)
+        aux = aux + a
+    return x, aux
+
+
+def stack_init(key, cfg: Config, n_layers: Optional[int] = None,
+               pattern=None) -> Params:
+    pattern = pattern or cfg.pattern
+    n = n_layers or cfg.n_layers
+    n_groups, n_rem = divmod(n, len(pattern))
+    k_g, k_r = jax.random.split(key)
+    out: Params = {}
+    if cfg.scan_layers and n_groups > 0:
+        gkeys = jax.random.split(k_g, n_groups)
+        out["groups"] = jax.vmap(
+            lambda k: _group_init(k, cfg, pattern))(gkeys)
+    else:
+        gkeys = jax.random.split(k_g, max(n_groups, 1))
+        out["group_list"] = [_group_init(gkeys[i], cfg, pattern)
+                             for i in range(n_groups)]
+    rkeys = jax.random.split(k_r, max(n_rem, 1))
+    out["rem"] = [layer_init(rkeys[i], cfg, pattern[i])
+                  for i in range(n_rem)]
+    return out
+
+
+def stack_specs(cfg: Config, n_layers: Optional[int] = None,
+                pattern=None) -> Params:
+    pattern = pattern or cfg.pattern
+    n = n_layers or cfg.n_layers
+    n_groups, n_rem = divmod(n, len(pattern))
+    gspec = {f"l{i}": layer_specs(cfg, pattern[i])
+             for i in range(len(pattern))}
+    out: Params = {}
+    if cfg.scan_layers and n_groups > 0:
+        out["groups"] = jax.tree.map(
+            lambda axes: ("layers",) + axes, gspec,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))
+    else:
+        out["group_list"] = [gspec] * n_groups
+    out["rem"] = [layer_specs(cfg, pattern[i]) for i in range(n_rem)]
+    return out
+
+
+def stack_apply(params: Params, x, cfg: Config, pattern=None, ctx=None,
+                prefix_len: int = 0):
+    pattern = pattern or cfg.pattern
+    aux_total = jnp.zeros((), jnp.float32)
+    inner = functools.partial(_group_apply, cfg=cfg, pattern=pattern,
+                              ctx=ctx, prefix_len=prefix_len)
+    if cfg.remat:
+        body = jax.checkpoint(
+            lambda p, h: inner(p, h),
+            policy=jax.checkpoint_policies.nothing_saveable)
+    else:
+        body = inner
+
+    if "groups" in params:
+        def scan_fn(carry, gp):
+            h, aux = carry
+            h, a = body(gp, h)
+            return (h, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total),
+                                         params["groups"])
+    else:
+        for gp in params.get("group_list", []):
+            x, a = body(gp, x)
+            aux_total = aux_total + a
+    for i, lp in enumerate(params.get("rem", [])):
+        x, a = layer_apply(lp, x, cfg, pattern[i], ctx=ctx,
+                           prefix_len=prefix_len)
+        aux_total = aux_total + a
+    return x, aux_total
+
+
+def stack_state_init(cfg: Config, batch: int, max_len: int,
+                     n_layers: Optional[int] = None, pattern=None) -> Params:
+    pattern = pattern or cfg.pattern
+    n = n_layers or cfg.n_layers
+    n_groups, n_rem = divmod(n, len(pattern))
+    gstate = lambda: {f"l{i}": layer_state_init(cfg, batch, max_len,
+                                                pattern[i])
+                      for i in range(len(pattern))}
+    out: Params = {}
+    if cfg.scan_layers and n_groups > 0:
+        one = gstate()
+        out["groups"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), one)
+    else:
+        out["group_list"] = [gstate() for _ in range(n_groups)]
+    out["rem"] = [layer_state_init(cfg, batch, max_len, pattern[i])
+                  for i in range(n_rem)]
+    return out
+
+
+def stack_state_specs(cfg: Config, n_layers: Optional[int] = None,
+                      pattern=None) -> Params:
+    pattern = pattern or cfg.pattern
+    n = n_layers or cfg.n_layers
+    n_groups, n_rem = divmod(n, len(pattern))
+    gspec = {f"l{i}": layer_state_specs(cfg, pattern[i])
+             for i in range(len(pattern))}
+    out: Params = {}
+    if cfg.scan_layers and n_groups > 0:
+        out["groups"] = jax.tree.map(
+            lambda axes: ("layers",) + axes, gspec,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))
+    else:
+        out["group_list"] = [gspec] * n_groups
+    out["rem"] = [layer_state_specs(cfg, pattern[i]) for i in range(n_rem)]
+    return out
+
+
+def stack_decode(params: Params, x, states: Params, index, cfg: Config,
+                 pattern=None, ctx=None):
+    pattern = pattern or cfg.pattern
+
+    def group_decode(gp, h, gs):
+        new_states = {}
+        for i, kinds in enumerate(pattern):
+            h, ns = layer_decode(gp[f"l{i}"], h, gs[f"l{i}"], index, cfg,
+                                 kinds, ctx=ctx)
+            new_states[f"l{i}"] = ns
+        return h, new_states
+
+    new_states: Params = {}
+    if "groups" in params:
+        def scan_fn(h, inp):
+            gp, gs = inp
+            h, ns = group_decode(gp, h, gs)
+            return h, ns
+        x, ns = jax.lax.scan(scan_fn, x, (params["groups"],
+                                          states["groups"]))
+        new_states["groups"] = ns
+    else:
+        new_states["group_list"] = []
+        for gp, gs in zip(params.get("group_list", []),
+                          states.get("group_list", [])):
+            x, ns = group_decode(gp, x, gs)
+            new_states["group_list"].append(ns)
+    new_states["rem"] = []
+    for i, (lp, ls) in enumerate(zip(params.get("rem", []),
+                                     states.get("rem", []))):
+        x, ns = layer_decode(lp, x, ls, index, cfg, pattern[i], ctx=ctx)
+        new_states["rem"].append(ns)
+    return x, new_states
+
+
+# ---------------------------------------------------------------------------
+# full models
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: Config) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "embed": cm.embed_init(ks[0], cfg),
+        "stack": stack_init(ks[1], cfg),
+        "nf": cm.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = cm._init_dense(ks[2], cfg.d_model, cfg.vocab, cfg, False)
+    if cfg.family == "encdec":
+        p["enc_stack"] = stack_init(ks[3], cfg, cfg.enc_layers,
+                                    cfg.enc_pattern)
+        p["enc_nf"] = cm.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def specs(cfg: Config) -> Params:
+    s: Params = {
+        "embed": cm.embed_specs(),
+        "stack": stack_specs(cfg),
+        "nf": {"g": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = cm._dense_specs("embed", "vocab", cfg, False)
+    if cfg.family == "encdec":
+        s["enc_stack"] = stack_specs(cfg, cfg.enc_layers, cfg.enc_pattern)
+        s["enc_nf"] = {"g": (None,)}
+    return s
+
+
+def _embed_tokens(params, tokens, cfg: Config):
+    e = params["embed"]["e"]
+    x = e[tokens] * jnp.sqrt(cfg.d_model).astype(e.dtype)
+    return x.astype(cfg.adtype)
+
+
+def _logits(params, x, cfg: Config):
+    xf = cm.rmsnorm(params["nf"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", xf.astype(jnp.float32),
+                            params["embed"]["e"].astype(jnp.float32))
+    else:
+        logits = cm.linear(params["head"], xf, cfg).astype(jnp.float32)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return cm.softcap(logits, cfg.final_softcap)
+
+
+def encode(params, enc_inputs, cfg: Config):
+    """Encoder pass (enc_inputs: frame/patch embeddings [B, T, D])."""
+    h, _ = stack_apply(params["enc_stack"], enc_inputs.astype(cfg.adtype),
+                       cfg, pattern=cfg.enc_pattern)
+    return cm.rmsnorm(params["enc_nf"], h, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: Config, *, enc_inputs=None,
+            prefix_embeddings=None, last_only: bool = False):
+    """logits, aux_loss.  tokens: [B, S] int32.
+
+    enc_inputs: [B, T, D] for enc-dec (audio stub); prefix_embeddings:
+    [B, P, D] prepended to the decoder sequence (vision stub, prefix-LM).
+    last_only: emit logits for the final position only (prefill) - avoids
+    materializing the [B, S, vocab] tensor.
+    """
+    x = _embed_tokens(params, tokens, cfg)
+    prefix_len = 0
+    ctx = None
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeddings.shape[1]
+    if cfg.family == "encdec":
+        assert enc_inputs is not None
+        ctx = encode(params, enc_inputs, cfg)
+    x = constrain(x, ("batch", "seq", "embed"))
+    x, aux = stack_apply(params["stack"], x, cfg, ctx=ctx,
+                         prefix_len=prefix_len if cfg.prefix_lm else 0)
+    if prefix_len:
+        x = x[:, prefix_len:]
+    if last_only:
+        x = x[:, -1:]
+    return _logits(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: Config, aux_weight: float = 0.01):
+    """Mean next-token cross entropy (+ MoE aux)."""
+    logits, aux = forward(
+        params, batch["tokens"], cfg,
+        enc_inputs=batch.get("enc_inputs"),
+        prefix_embeddings=batch.get("prefix_embeddings"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+def decode_state_init(cfg: Config, batch: int, max_len: int) -> Params:
+    return stack_state_init(cfg, batch, max_len)
+
+
+def decode_state_specs(cfg: Config) -> Params:
+    return stack_state_specs(cfg)
+
+
+def decode_step(params, token, states, index, cfg: Config, *, ctx=None):
+    """One decode step: token [B, 1] -> (logits [B, 1, V], new states)."""
+    x = _embed_tokens(params, token, cfg)
+    x, new_states = stack_decode(params["stack"], x, states, index, cfg,
+                                 ctx=ctx)
+    return _logits(params, x, cfg), new_states

@@ -1,0 +1,364 @@
+"""Recurrent mixers: xLSTM's mLSTM/sLSTM and Griffin's RG-LRU.
+
+mLSTM (xLSTM, arXiv:2405.04517): matrix-memory cell with exponential
+gating.  We implement the numerically-stable *chunkwise-parallel* form
+(log-space cumulative forget gates, per-chunk attention-like inner product
++ recurrent cross-chunk state), which is how the block maps efficiently to
+the MXU; the token-recurrent form is used for decode.
+
+sLSTM: scalar-memory cell with exponential gating and a true hidden-state
+recurrence (R h_{t-1}) - inherently sequential, implemented with lax.scan.
+
+RG-LRU (Griffin / RecurrentGemma, arXiv:2402.19427): gated diagonal linear
+recurrence h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t), a_t =
+exp(-c * softplus(L) * r_t), with a short temporal conv in front;
+parallelized with an associative scan over the sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import common as cm
+from .common import Config, Params
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: Config) -> Params:
+    ks = jax.random.split(key, 7)
+    qz = cfg.quant_bits is not None
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": cm._init_dense(ks[0], d, h * hd, cfg, qz),
+        "wk": cm._init_dense(ks[1], d, h * hd, cfg, qz),
+        "wv": cm._init_dense(ks[2], d, h * hd, cfg, qz),
+        "wo": cm._init_dense(ks[3], h * hd, d, cfg, qz),
+        "wf": {"w": (jax.random.normal(ks[4], (d, h), jnp.float32)
+                     * 0.02).astype(jnp.float32),
+               "b": jnp.full((h,), 3.0, jnp.float32)},
+        "wi": {"w": (jax.random.normal(ks[5], (d, h), jnp.float32)
+                     * 0.02).astype(jnp.float32),
+               "b": jnp.zeros((h,), jnp.float32)},
+        "gn": cm.rmsnorm_init(hd),
+    }
+
+
+def mlstm_specs(cfg: Config) -> Params:
+    qz = cfg.quant_bits is not None
+    return {
+        "wq": cm._dense_specs("embed", "heads", cfg, qz),
+        "wk": cm._dense_specs("embed", "heads", cfg, qz),
+        "wv": cm._dense_specs("embed", "heads", cfg, qz),
+        "wo": cm._dense_specs("heads", "embed", cfg, qz),
+        "wf": {"w": ("embed", None), "b": (None,)},
+        "wi": {"w": ("embed", None), "b": (None,)},
+        "gn": {"g": (None,)},
+    }
+
+
+def _mlstm_gates(params, x):
+    f = jax.nn.log_sigmoid(x.astype(jnp.float32) @ params["wf"]["w"]
+                           + params["wf"]["b"])          # [B,S,H] log forget
+    i = x.astype(jnp.float32) @ params["wi"]["w"] + params["wi"]["b"]
+    return f, i
+
+
+def mlstm_apply(params: Params, x: jax.Array, cfg: Config) -> jax.Array:
+    """Chunkwise-parallel mLSTM over the full sequence. x: [B,S,D].
+
+    Stabilized exactly like the paper's recurrence: a running log-max `m`
+    rescales both the matrix memory C and the normalizer n; the normalizer
+    rides along as an extra value channel (v' = [v, 1]), so one set of
+    einsums produces numerator and denominator.
+    """
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    nq = max(1, s // CHUNK)
+    c = s // nq
+    q = cm.linear(params["wq"], x, cfg).reshape(b, s, h, hd) / math.sqrt(hd)
+    k = cm.linear(params["wk"], x, cfg).reshape(b, s, h, hd)
+    v = cm.linear(params["wv"], x, cfg).reshape(b, s, h, hd)
+    f, i = _mlstm_gates(params, x)                       # [B,S,H]
+
+    qc = q.reshape(b, nq, c, h, hd).astype(jnp.float32)
+    kc = k.reshape(b, nq, c, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nq, c, h, hd).astype(jnp.float32)
+    vc = jnp.concatenate([vc, jnp.ones_like(vc[..., :1])], -1)  # [.., hd+1]
+    fc = f.reshape(b, nq, c, h)
+    ic = i.reshape(b, nq, c, h)
+    fcum = jnp.cumsum(fc, axis=2)                        # within-chunk logs
+
+    # intra-chunk: w[t,u] = exp(fcum[t]-fcum[u]+i[u] - m_intra[t]) (q_t.k_u)
+    lqk = jnp.einsum("bnchd,bnuhd->bnhcu", qc, kc)
+    gate = (fcum[:, :, :, None, :] - fcum[:, :, None, :, :]
+            + ic[:, :, None, :, :])                      # [b,n,t,u,h]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    gate = jnp.where(causal[None, None, :, :, None], gate, -1e30)
+    m_intra = jnp.maximum(jnp.max(gate, axis=3), -1e30)  # [b,n,t,h]
+    wts = jnp.exp(gate - m_intra[:, :, :, None, :])
+    intra = jnp.einsum("bnhcu,bncuh,bnuhe->bnche", lqk, wts, vc)
+
+    # inter-chunk state scan with running max: g_u = fsum - fcum_u + i_u
+    fsum = fcum[:, :, -1, :]                             # [b,n,h]
+    g = fsum[:, :, None, :] - fcum + ic                  # [b,n,c,h]
+    m_chunk = jnp.max(g, axis=2)                         # [b,n,h]
+    kv_chunk = jnp.einsum("bnchd,bnch,bnche->bnhde", kc,
+                          jnp.exp(g - m_chunk[:, :, None, :]), vc)
+
+    def scan_fn(carry, inp):
+        S, m = carry                                     # [b,h,hd,hd+1],[b,h]
+        kvc, fs, mc = inp
+        m_new = jnp.maximum(m + fs, mc)
+        S_new = (S * jnp.exp(m + fs - m_new)[:, :, None, None]
+                 + kvc * jnp.exp(mc - m_new)[:, :, None, None])
+        return (S_new, m_new), (S, m)                    # emit previous
+
+    init = (jnp.zeros((b, h, hd, hd + 1), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    _, (prev_S, prev_m) = jax.lax.scan(
+        scan_fn, init, (kv_chunk.transpose(1, 0, 2, 3, 4),
+                        fsum.transpose(1, 0, 2),
+                        m_chunk.transpose(1, 0, 2)))
+    prev_S = prev_S.transpose(1, 0, 2, 3, 4)             # [b,n,h,hd,hd+1]
+    prev_m = prev_m.transpose(1, 0, 2)                   # [b,n,h]
+
+    # combine intra and inter under a shared stabilizer m_tot
+    m_inter = fcum + prev_m[:, :, None, :]               # [b,n,t,h]
+    m_tot = jnp.maximum(m_intra, m_inter)
+    inter = jnp.einsum("bnchd,bnhde->bnche", qc, prev_S)
+    num_den = (intra * jnp.exp(m_intra - m_tot)[..., None]
+               + inter * jnp.exp(m_inter - m_tot)[..., None])
+    num, den = num_den[..., :hd], num_den[..., hd]
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+    out = (num / denom).reshape(b, s, h, hd)
+    out = cm.rmsnorm(params["gn"], out.astype(x.dtype), cfg.norm_eps)
+    out = constrain(out, ("batch", "seq", "heads", None))
+    return cm.linear(params["wo"], out.reshape(b, s, -1), cfg)
+
+
+def mlstm_state_init(cfg: Config, batch: int) -> Dict[str, jax.Array]:
+    h, hd = cfg.n_heads, cfg.hd
+    return {"S": jnp.zeros((batch, h, hd, hd + 1), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_state_specs() -> Dict[str, tuple]:
+    return {"S": ("batch", "heads", None, None),
+            "m": ("batch", "heads")}
+
+
+def mlstm_decode(params: Params, x: jax.Array, state, cfg: Config):
+    """Token-recurrent mLSTM step (paper recurrence, stabilized). x: [B,1,D]."""
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    q = (cm.linear(params["wq"], x, cfg).reshape(b, h, hd)
+         / math.sqrt(hd)).astype(jnp.float32)
+    k = cm.linear(params["wk"], x, cfg).reshape(b, h, hd).astype(jnp.float32)
+    v = cm.linear(params["wv"], x, cfg).reshape(b, h, hd).astype(jnp.float32)
+    v = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)
+    f, i = _mlstm_gates(params, x)                       # [B,1,H]
+    logf, ig = f[:, 0], i[:, 0]
+    m_new = jnp.maximum(state["m"] + logf, ig)
+    S = (state["S"] * jnp.exp(state["m"] + logf - m_new)[:, :, None, None]
+         + jnp.exp(ig - m_new)[:, :, None, None]
+         * jnp.einsum("bhd,bhe->bhde", k, v))
+    nd = jnp.einsum("bhd,bhde->bhe", q, S)
+    num, den = nd[..., :hd], nd[..., hd]
+    out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    out = cm.rmsnorm(params["gn"], out[:, None].astype(x.dtype), cfg.norm_eps)
+    y = cm.linear(params["wo"], out.reshape(b, 1, -1), cfg)
+    return y, {"S": S, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: Config) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    qz = cfg.quant_bits is not None
+    return {
+        "wx": cm._init_dense(ks[0], d, 4 * h * hd, cfg, qz),   # z,i,f,o pre-acts
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+              / math.sqrt(hd)).astype(jnp.float32),
+        "b": jnp.zeros((4 * h * hd,), jnp.float32),
+        "wo": cm._init_dense(ks[2], h * hd, d, cfg, qz),
+        "gn": cm.rmsnorm_init(hd),
+    }
+
+
+def slstm_specs(cfg: Config) -> Params:
+    qz = cfg.quant_bits is not None
+    return {
+        "wx": cm._dense_specs("embed", "heads", cfg, qz),
+        "r": ("heads", None, None),
+        "b": ("heads",),
+        "wo": cm._dense_specs("heads", "embed", cfg, qz),
+        "gn": {"g": (None,)},
+    }
+
+
+def slstm_apply(params: Params, x: jax.Array, cfg: Config,
+                state: Optional[Dict] = None, return_state: bool = False):
+    """Sequential sLSTM (lax.scan over time). x: [B,S,D]."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    pre = (cm.linear(params["wx"], x, cfg).astype(jnp.float32)
+           + params["b"]).reshape(b, s, h, 4, hd)
+    if state is None:
+        state = slstm_state_init(cfg, b)
+
+    def step(carry, inp):
+        c, n, hid, m = carry
+        px = inp                                          # [b,h,4,hd]
+        rec = jnp.einsum("bhd,hdk->bhk", hid, params["r"]).reshape(
+            b, h, 4, hd)
+        z, i, f, o = [(px + rec)[:, :, j] for j in range(4)]
+        zt = jnp.tanh(z)
+        ot = jax.nn.sigmoid(o)
+        logf = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(logf + m, i)                  # stabilizer
+        ig = jnp.exp(i - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c_new = fg * c + ig * zt
+        n_new = fg * n + ig
+        hid_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, hid_new, m_new), hid_new
+
+    init = (state["c"], state["n"], state["h"], state["m"])
+    (c_f, n_f, h_f, m_f), hs = jax.lax.scan(
+        step, init, pre.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3)                         # [B,S,H,hd]
+    hs = cm.rmsnorm(params["gn"], hs.astype(x.dtype), cfg.norm_eps)
+    y = cm.linear(params["wo"], hs.reshape(b, s, -1), cfg)
+    if return_state:
+        return y, {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
+    return y
+
+
+def slstm_state_init(cfg: Config, batch: int) -> Dict[str, jax.Array]:
+    h, hd = cfg.n_heads, cfg.hd
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 10.0}
+
+
+def slstm_state_specs() -> Dict[str, tuple]:
+    ax = ("batch", "heads", None)
+    return {"c": ax, "n": ax, "h": ax, "m": ax}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def rglru_init(key, cfg: Config) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    qz = cfg.quant_bits is not None
+    # Lambda init so a^(1/c) in (0.9, 0.999)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) * 8.0) - 1.0)       # inv-softplus
+    return {
+        "wx": cm._init_dense(ks[0], d, w, cfg, qz),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, w), jnp.float32)
+                 * 0.02).astype(jnp.float32),
+        "wr": {"w": (jax.random.normal(ks[2], (w, w), jnp.float32)
+                     / math.sqrt(w)).astype(cfg.adtype)},
+        "wi": {"w": (jax.random.normal(ks[3], (w, w), jnp.float32)
+                     / math.sqrt(w)).astype(cfg.adtype)},
+        "lam": lam,
+        "wo": cm._init_dense(ks[5], w, d, cfg, qz),
+    }
+
+
+def rglru_specs(cfg: Config) -> Params:
+    qz = cfg.quant_bits is not None
+    return {
+        "wx": cm._dense_specs("embed", "state", cfg, qz),
+        "conv": ("conv", "state"),
+        "wr": {"w": ("state", None)},
+        "wi": {"w": ("state", None)},
+        "lam": ("state",),
+        "wo": cm._dense_specs("state", "embed", cfg, qz),
+    }
+
+
+_LRU_C = 8.0
+
+
+def _rglru_core(params, u, h0):
+    """u: [B,S,W] pre-gates; h0: [B,W] initial state. Associative scan."""
+    r = jax.nn.sigmoid(u @ params["wr"]["w"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ params["wi"]["w"].astype(u.dtype))
+    log_a = (-_LRU_C * jax.nn.softplus(params["lam"])
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (i * u).astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_seq = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+    _, hs = jax.lax.associative_scan(combine, (a_seq, b_seq), axis=1)
+    return hs[:, 1:], hs[:, -1]                           # [B,S,W], [B,W]
+
+
+def rglru_apply(params: Params, x: jax.Array, cfg: Config,
+                state: Optional[Dict] = None, return_state: bool = False):
+    """Full-sequence RG-LRU block: conv1d -> gated LRU -> out proj."""
+    b, s, d = x.shape
+    u = cm.linear(params["wx"], x, cfg)                   # [B,S,W]
+    u = constrain(u, ("batch", "seq", "state"))
+    # short causal temporal conv
+    cw = params["conv"].shape[0]
+    pads = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pads[:, j:j + s] * params["conv"][j].astype(u.dtype)
+               for j in range(cw))
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((b, u.shape[-1]), jnp.float32))
+    hs, h_last = _rglru_core(params, conv, h0)
+    y = cm.linear(params["wo"], hs.astype(x.dtype), cfg)
+    if return_state:
+        tail = pads[:, -(cw - 1):] if cw > 1 else jnp.zeros(
+            (b, 0, u.shape[-1]), u.dtype)
+        return y, {"h": h_last, "conv_tail": tail}
+    return y
+
+
+def rglru_state_init(cfg: Config, batch: int) -> Dict[str, jax.Array]:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv_tail": jnp.zeros((batch, cfg.conv_width - 1, w),
+                                   jnp.dtype(cfg.dtype))}
+
+
+def rglru_state_specs() -> Dict[str, tuple]:
+    return {"h": ("batch", "state"), "conv_tail": ("batch", None, "state")}
+
+
+def rglru_decode(params: Params, x: jax.Array, state, cfg: Config):
+    """One-token RG-LRU step. x: [B,1,D]."""
+    b = x.shape[0]
+    u = cm.linear(params["wx"], x, cfg)                   # [B,1,W]
+    cw = params["conv"].shape[0]
+    window = jnp.concatenate([state["conv_tail"].astype(u.dtype), u], axis=1)
+    conv = sum(window[:, -cw + j] * params["conv"][j].astype(u.dtype)
+               for j in range(cw))[:, None]
+    hs, h_last = _rglru_core(params, conv, state["h"])
+    y = cm.linear(params["wo"], hs.astype(x.dtype), cfg)
+    return y, {"h": h_last, "conv_tail": window[:, 1:]}

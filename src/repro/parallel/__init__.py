@@ -1,0 +1,2 @@
+"""Distribution: logical sharding, compression, pipeline parallelism."""
+from . import compression, pipeline, sharding

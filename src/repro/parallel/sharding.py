@@ -1,0 +1,179 @@
+"""Logical-axis sharding: names -> mesh axes via a rules table (MaxText-style).
+
+Every parameter/activation dimension carries a *logical* name ("embed",
+"mlp", "heads", ...).  A rules table maps logical names to physical mesh
+axes; changing distribution strategy (pure TP -> FSDP, adding SP) is a
+rules edit, not a model edit - which is exactly what the §Perf hillclimb
+iterates on.
+
+Mesh axes:
+  pod    - data-parallel across pods (slow inter-pod links)
+  data   - data parallel / FSDP within a pod
+  model  - tensor/expert/sequence parallel within a pod
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+# default rules: TP on model axis, batch on (pod, data), FSDP for expert and
+# mlp dims over data (so giant MoE models fit), sequence-parallel KV cache.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "mlp": ("model",),            # FFN hidden dim
+    "heads": ("model",),          # attention query heads
+    "kv_heads": None,             # few KV heads: replicate, shard seq instead
+    "head_dim": None,
+    "qkv": ("model",),
+    "vocab": ("model",),
+    "expert": ("data",),          # expert weights FSDP'd over data axis
+    "expert_mlp": ("model",),     # expert FFN hidden dim
+    "moe_tokens": ("pod", "data"),  # token-group dim of dispatched buffers
+    "capacity": None,
+    "cache_seq": ("model",),      # KV cache sequence dim (flash-decoding SP)
+    "state": ("model",),          # recurrent state dim (RG-LRU / mLSTM)
+    "layers": None,               # stacked-scan layer dim
+    "conv": None,
+    "bits": None,                 # bit-plane dim of packed weights
+    "packed_in": None,            # packed (K/32) dim: replicate with kv...
+}
+
+
+# mesh axes available to specs; drivers set this from mesh.axis_names so a
+# single-pod mesh silently drops the "pod" axis from every rule
+_ACTIVE_AXES: Tuple[str, ...] = ("pod", "data", "model")
+# rules active for model-internal activation constraints: drivers install
+# the per-arch rules here so `constrain()` deep inside layers sees the same
+# strategy the in/out shardings use
+_ACTIVE_RULES: Optional[Rules] = None
+
+
+def set_mesh_axes(names: Sequence[str]) -> None:
+    global _ACTIVE_AXES
+    _ACTIVE_AXES = tuple(names)
+
+
+def set_active_rules(rules: Optional[Rules]) -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = dict(rules) if rules else None
+
+
+def spec_for(logical_axes: Sequence[Optional[str]],
+             rules: Optional[Rules] = None) -> P:
+    """Logical names (one per dim, None = replicated) -> PartitionSpec."""
+    rules = dict(DEFAULT_RULES, **(rules if rules is not None
+                                   else (_ACTIVE_RULES or {})))
+    parts = []
+    used: set = set()
+    for name in logical_axes:
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            parts.append(None)
+        else:
+            # a mesh axis may appear only once in a spec, and must exist
+            ax = tuple(a for a in axes
+                       if a not in used and a in _ACTIVE_AXES)
+            used.update(ax)
+            parts.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+    return P(*parts)
+
+
+def tree_specs(logical_tree: Any, rules: Optional[Rules] = None) -> Any:
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: spec_for(axes, rules), logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _prune_spec(spec: P, shape, mesh_shape) -> P:
+    """Drop mesh axes whose product doesn't divide the dim size.
+
+    This is what makes one rules table serve every arch: 4-head xlstm
+    params, whisper's 51865 vocab, 8-expert MoEs on a 16-wide axis and
+    batch-1 decode all degrade gracefully to replication on that dim.
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, p in zip(shape, parts):
+        if p is None:
+            out.append(None)
+            continue
+        axes = (p,) if isinstance(p, str) else tuple(p)
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh_shape[a]
+            if dim % size == 0:
+                break
+            axes = axes[:-1]
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def shardings_pruned(mesh: Mesh, spec_tree: Any, struct_tree: Any) -> Any:
+    """NamedShardings with dimension-aware axis pruning (see _prune_spec)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    specs_flat, tdef = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    structs_flat = tdef.flatten_up_to(struct_tree)
+    out = [NamedSharding(mesh, _prune_spec(s, st.shape, mesh_shape))
+           for s, st in zip(specs_flat, structs_flat)]
+    return tdef.unflatten(out)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]],
+              rules: Optional[Rules] = None) -> jax.Array:
+    """Activation sharding constraint by logical names (inside jit)."""
+    try:
+        spec = spec_for(logical_axes, rules)
+        mesh = None
+        try:
+            import jax._src.mesh as _mesh_mod
+            mesh = _mesh_mod.thread_resources.env.physical_mesh
+        except Exception:
+            pass
+        if mesh is not None and not mesh.empty:
+            mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            spec = _prune_spec(spec, x.shape, mesh_shape)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        # outside a mesh context (e.g. single-device smoke tests)
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Distribution strategy knobs threaded through train/serve steps."""
+    rules: Optional[Rules] = None          # overrides of DEFAULT_RULES
+    fsdp: bool = False                     # shard params over data axis too
+
+    def resolved(self) -> Rules:
+        rules = dict(DEFAULT_RULES, **(self.rules or {}))
+        if self.fsdp:
+            # FSDP/ZeRO-3: fold the data (and, when present, pod) axes into
+            # the big weight dims; on a single-pod mesh the pod axis prunes
+            # away automatically.  Cross-pod sharding is what lets
+            # arctic-480b's optimizer state fit 16GB/chip at 512 chips.
+            rules["mlp"] = ("model",)
+            rules["embed"] = (("pod", "data") if "pod" in _ACTIVE_AXES
+                              else ("data",))
+            rules["expert"] = (("pod", "data") if "pod" in _ACTIVE_AXES
+                               else ("data",))
+        return rules

@@ -1,0 +1,2 @@
+"""Precision-agnostic quantization: bit-plane packing + quantized layers."""
+from . import bitplane

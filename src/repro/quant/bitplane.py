@@ -1,0 +1,122 @@
+"""Bit-plane packing: the TPU-native form of CoMeFa's transposed layout.
+
+A w-bit integer tensor becomes w binary *planes*; each plane is packed 32
+lanes to a uint32 along the reduction (K) axis.  This is exactly the
+paper's transposed storage (bits of an element spread across rows) mapped
+to the TPU register geometry: one 32-bit lane of a packed word plays the
+role of one CoMeFa column, a `jnp` bitwise op over a [K/32, N] plane is
+one CoMeFa compute cycle over 32*N lanes.
+
+Two's-complement convention: plane i of a signed w-bit value carries bit i;
+the MSB plane (i = w-1) has weight -2^(w-1), the rest +2^i.  `coeffs`
+returns those weights so matmuls can fold sign handling into the per-plane
+accumulation (no separate zero-point pass).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 32   # packing factor: bits per packed word
+
+
+def coeffs(bits: int, signed: bool = True) -> np.ndarray:
+    """Per-plane weights (two's complement when signed)."""
+    c = np.float32(2.0) ** np.arange(bits, dtype=np.float32)
+    if signed:
+        c[-1] = -c[-1]
+    return c
+
+
+def quantize(w: jax.Array, bits: int, axis: int = 0
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-channel quantization.
+
+    Returns (q, scale): q int32 in [-2^(b-1), 2^(b-1)-1], w ~= q * scale,
+    with `scale` shaped like w reduced over `axis` (per-output-channel).
+    """
+    qmax = 2.0 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def pack(q: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Pack a signed int tensor into bit planes along `axis`.
+
+    q: int32 [..., K, ...] with K = shape[axis] divisible by 32.
+    Returns uint32 [bits, ..., K//32, ...] - plane-major, packed axis
+    reduced 32x.  Bit i of lane k lives in word k//32 at position k%32.
+    """
+    k = q.shape[axis]
+    assert k % LANES == 0, f"packed axis {k} must be divisible by {LANES}"
+    u = q.astype(jnp.uint32)
+    planes = []
+    for i in range(bits):
+        bit = (u >> i) & 1                                    # [..., K, ...]
+        shp = list(bit.shape)
+        shp[axis:axis + 1] = [k // LANES, LANES]
+        b = bit.reshape(shp)
+        weights = (jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32))
+        wshape = [1] * b.ndim
+        wshape[axis + 1] = LANES
+        word = jnp.sum(b * weights.reshape(wshape), axis=axis + 1,
+                       dtype=jnp.uint32)
+        planes.append(word)
+    return jnp.stack(planes, axis=0)
+
+
+def unpack(packed: jax.Array, bits: int, axis: int = 0,
+           signed: bool = True) -> jax.Array:
+    """Inverse of `pack`: planes -> int32 values (axis is pre-pack axis)."""
+    vals = 0
+    for i in range(bits):
+        word = packed[i]                                      # [..., K32, ...]
+        shp = list(word.shape)
+        k32 = shp[axis]
+        expand = jnp.repeat(word, LANES, axis=axis)           # [..., K, ...]
+        sh = jnp.arange(k32 * LANES, dtype=jnp.uint32) % LANES
+        shshape = [1] * expand.ndim
+        shshape[axis] = k32 * LANES
+        bit = ((expand >> sh.reshape(shshape)) & 1).astype(jnp.int32)
+        weight = -(1 << i) if (signed and i == bits - 1) else (1 << i)
+        vals = vals + bit * weight
+    return vals
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis"))
+def quantize_pack(w: jax.Array, bits: int, axis: int = 0):
+    """One-step: float weights -> (packed planes, scale)."""
+    q, scale = quantize(w, bits, axis=axis)
+    return pack(q, bits, axis=axis), scale
+
+
+# ---------------------------------------------------------------------------
+# HFP8-style custom float emulation (paper Sec. IV-C elementwise benchmark)
+# ---------------------------------------------------------------------------
+
+def quantize_float(x: jax.Array, e_bits: int = 4, m_bits: int = 3
+                   ) -> jax.Array:
+    """Round to a custom (1, e, m) float format (truncating, no subnormals).
+
+    Matches the semantics of the bit-serial FP programs in
+    `core/comefa/program.py` (FloatPIM-style truncation).
+    """
+    bias = 2 ** (e_bits - 1) - 1
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    exp = jnp.floor(jnp.log2(jnp.where(ax > 0, ax, 1.0)))
+    exp = jnp.clip(exp, 1 - bias, 2 ** e_bits - 2 - bias)
+    frac = ax / 2.0 ** exp                       # in [1, 2)
+    mant = jnp.floor((frac - 1.0) * 2 ** m_bits) / 2 ** m_bits
+    out = sign * (1.0 + mant) * 2.0 ** exp
+    return jnp.where(ax == 0, 0.0, out).astype(x.dtype)

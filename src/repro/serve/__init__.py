@@ -1,0 +1,2 @@
+"""Serving: prefill/decode engine with sharded KV caches."""
+from . import engine

@@ -1,0 +1,2 @@
+"""Training: AdamW(+int8 v), microbatched step, fault-tolerant loop."""
+from . import loop, optimizer, step

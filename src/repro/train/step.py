@@ -1,0 +1,122 @@
+"""Train step: microbatched gradient accumulation + AdamW update.
+
+`train_step` is the jit/lower target of the dry-run.  Microbatching keeps
+the activation/logit footprint bounded (gemma3's [tokens, 262k] logits and
+arctic's expert buffers would not fit otherwise): the global batch splits
+into `microbatches` slices accumulated with a lax.scan before one optimizer
+update - same numerics as the unsplit step (mean-of-means with equal
+slices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.common import Config
+from ..parallel import sharding as shd
+from . import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    microbatches: int = 1
+    aux_weight: float = 0.01
+    accum_dtype: str = "float32"      # bf16 halves the grad-accum buffer
+    unroll_accum: bool = False        # python-loop accumulation (used by
+                                      # the roofline analysis: straight-line
+                                      # code gets *counted* exactly)
+
+
+def init_state(key, cfg: Config, tcfg: TrainConfig) -> Dict[str, Any]:
+    params = lm.init(key, cfg)
+    return {
+        "params": params,
+        "opt": opt.init_state(params, tcfg.adamw),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(cfg: Config, tcfg: TrainConfig) -> Dict[str, Any]:
+    pspecs = lm.specs(cfg)
+    return {
+        "params": pspecs,
+        "opt": opt.state_specs(pspecs, tcfg.adamw),
+        "step": (),
+    }
+
+
+def batch_specs() -> Dict[str, tuple]:
+    return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array],
+               cfg: Config, tcfg: TrainConfig
+               ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    params = state["params"]
+    nmb = tcfg.microbatches
+
+    def loss_of(p, mb):
+        return lm.loss_fn(p, mb, cfg, aux_weight=tcfg.aux_weight)
+
+    if nmb == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params, batch)
+    else:
+        micro = _split_micro(batch, nmb)
+        adt = jnp.dtype(tcfg.accum_dtype)
+
+        def accum(carry, mb):
+            g_acc, l_acc = carry
+            (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + (b / nmb).astype(adt), g_acc, g)
+            return (g_acc, l_acc + l / nmb), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+        if tcfg.unroll_accum:
+            carry = (zeros, 0.0)
+            for i in range(nmb):
+                carry, _ = accum(carry, jax.tree.map(lambda x: x[i], micro))
+            grads, loss = carry
+        else:
+            (grads, loss), _ = jax.lax.scan(accum, (zeros, 0.0), micro)
+        metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    new_params, new_opt = opt.apply_updates(
+        params, grads, state["opt"], state["step"], tcfg.adamw)
+    new_state = {"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}
+    out_metrics = {"loss": loss, "grad_norm": opt.global_norm(grads),
+                   **{k: v for k, v in metrics.items()}}
+    return new_state, out_metrics
+
+
+def make_jitted_train_step(mesh, cfg: Config, tcfg: TrainConfig,
+                           rules: Optional[dict] = None):
+    """jit train_step with in/out shardings resolved from logical specs."""
+    shd.set_active_rules(rules)
+    sspecs = shd.tree_specs(state_specs(cfg, tcfg), rules)
+    bspecs = shd.tree_specs(batch_specs(), rules)
+    state_structs = jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, tcfg))
+    state_sh = shd.shardings_pruned(mesh, sspecs, state_structs)
+    fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg)
+    return jax.jit(
+        fn,
+        in_shardings=(state_sh, shd.shardings(mesh, bspecs)),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,))

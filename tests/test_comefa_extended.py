@@ -1,0 +1,119 @@
+"""Extended CoMeFa program tests: compare/select, max-reduce, division,
+Booth-recoded OOOR."""
+import numpy as np
+import pytest
+
+from repro.core.comefa import ComefaArray, N_COLS, layout, program
+
+RNG = np.random.default_rng(7)
+
+
+def rand_u(bits, n=N_COLS, rng=RNG):
+    return rng.integers(0, 1 << bits, size=n, dtype=np.int64)
+
+
+def test_compare_ge_and_select():
+    arr = ComefaArray()
+    n = 8
+    a, b = rand_u(n), rand_u(n)
+    layout.place(arr, a, 0, n)
+    layout.place(arr, b, n, n)
+    tmp = list(range(3 * n, 5 * n))
+    prog = program.compare_ge(list(range(n)), list(range(n, 2 * n)),
+                              tmp, 5 * n)
+    # carry latch now holds (a >= b); select max into rows 2n..3n
+    prog += program.select(True, list(range(n)), list(range(n, 2 * n)),
+                           list(range(2 * n, 3 * n)))
+    arr.run(prog)
+    flag = layout.extract(arr, 5 * n, 1, block=0)
+    np.testing.assert_array_equal(flag, (a >= b).astype(np.int64))
+    got = layout.extract(arr, 2 * n, n, block=0)
+    np.testing.assert_array_equal(got, np.maximum(a, b))
+
+
+@pytest.mark.parametrize("steps", [1, 2, 3])
+def test_reduce_max_tree(steps):
+    arr = ComefaArray()
+    n = 6
+    vals = rand_u(n)
+    layout.place(arr, vals, 0, n)
+    scratch = list(range(n, n + 3 * n + 1 + n))
+    prog = []
+    for s in range(steps):
+        prog += program.reduce_max(list(range(n)), scratch, n, 1 << s)
+    arr.run(prog)
+    got = layout.extract(arr, 0, n, block=0)
+    g = 1 << steps
+    expect = vals.reshape(-1, g).max(axis=1)
+    np.testing.assert_array_equal(got[::g], expect)
+
+
+@pytest.mark.parametrize("n", [4, 6, 8])
+def test_division_restoring(n):
+    arr = ComefaArray()
+    a = rand_u(n)
+    b = np.maximum(rand_u(n), 1)                    # avoid div by zero
+    layout.place(arr, a, 0, n)
+    layout.place(arr, b, n, n)
+    quot = list(range(2 * n, 3 * n))
+    rem = list(range(3 * n, 4 * n))
+    scratch = list(range(4 * n, 6 * n + 2))
+    prog = program.div(list(range(n)), list(range(n, 2 * n)), quot, rem,
+                       scratch)
+    arr.run(prog)
+    q = layout.extract(arr, 2 * n, n, block=0)
+    r = layout.extract(arr, 3 * n, n, block=0)
+    np.testing.assert_array_equal(q, a // b)
+    np.testing.assert_array_equal(r, a % b)
+
+
+def test_booth_digits_identity_and_optimality():
+    for x in list(range(64)) + [255, 170, 126, 124]:
+        ds = program.booth_digits(x, 8)
+        assert sum(int(d) * (1 << i) for i, d in enumerate(ds)) == x
+        assert all(d in (-1, 0, 1) for d in ds)
+        # NAF is never denser than binary
+        assert sum(1 for d in ds if d) <= bin(x).count("1")
+        # and non-adjacent
+        assert all(not (a and b) for a, b in zip(ds, ds[1:]))
+
+
+def test_booth_beats_popcount_on_runs():
+    """Runs of ones: Booth uses 2 nonzero digits where popcount uses many."""
+    x = 0b0111110
+    assert bin(x).count("1") == 5
+    nz = sum(1 for d in program.booth_digits(x, 8) if d)
+    assert nz == 2
+
+
+def test_ooor_dot_booth_matches_plain():
+    arr = ComefaArray()
+    k, wb, xb, accb = 3, 5, 6, 24
+    w = np.stack([rand_u(wb) for _ in range(k)])
+    x = np.array([0b011111, 0b110000, 37])          # mixed patterns
+    w_rows = []
+    for j in range(k):
+        rows = list(range(j * wb, (j + 1) * wb))
+        layout.place(arr, w[j], rows[0], wb)
+        w_rows.append(rows)
+    acc = list(range(k * wb, k * wb + accb))
+    neg = list(range(k * wb + accb, k * wb + accb + wb))
+    prog = program.ooor_dot_booth(w_rows, list(x), xb, acc, neg)
+    cyc = arr.run(prog)
+    got = layout.extract(arr, k * wb, accb, block=0)
+    expect = (w * x[:, None]).sum(axis=0)
+    np.testing.assert_array_equal(got, expect)
+
+    # the plain OOOR schedule does popcount(x) adds; NAF-Booth does
+    # <= that many (strictly fewer for the runs-of-ones value), at the
+    # cost of one complement per element with negative digits
+    arr2 = ComefaArray()
+    for j in range(k):
+        layout.place(arr2, w[j], w_rows[j][0], wb)
+    cyc_plain = arr2.run(program.ooor_dot(w_rows, list(x), xb, acc))
+    got2 = layout.extract(arr2, k * wb, accb, block=0)
+    np.testing.assert_array_equal(got2, expect)
+    booth_adds = sum(
+        sum(1 for d in program.booth_digits(int(v), xb) if d) for v in x)
+    plain_adds = sum(bin(int(v)).count("1") for v in x)
+    assert booth_adds < plain_adds                  # 0b011111 collapses

@@ -1,0 +1,152 @@
+"""Analytical FPGA model vs. the paper's published numbers."""
+import pytest
+
+from repro.core.fpga_model import area, energy, perf, resources as R, throughput
+
+
+# ---------------------------------------------------------------------------
+# Fig 8: peak MAC throughput gains
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prec", ["int4", "int8", "int16", "hfp8", "fp16"])
+def test_fig8_throughput_gains(prec):
+    gd = throughput.throughput_gain(prec, "comefa-d")
+    ga = throughput.throughput_gain(prec, "comefa-a")
+    assert abs(gd - throughput.PAPER_GAINS_D[prec]) <= 0.06, (prec, gd)
+    assert abs(ga - throughput.PAPER_GAINS_A[prec]) <= 0.06, (prec, ga)
+
+
+def test_fig8_comefa_throughput_first_principles():
+    """CoMeFa-D int8: 1518 blocks x 160 lanes x 588MHz / 114 cycles."""
+    t = throughput.comefa_mac_throughput(R.COMEFA_D, "int8")
+    assert abs(t - 1518 * 160 * 588e6 / 114) / t < 1e-9
+
+
+def test_fig8_ccb_has_no_float():
+    assert throughput.comefa_mac_throughput(R.CCB, "hfp8") == 0.0
+    assert throughput.comefa_mac_throughput(R.CCB, "fp16") == 0.0
+
+
+def test_fig8_bit_serial_throughput_decreases_with_precision():
+    t4 = throughput.comefa_mac_throughput(R.COMEFA_D, "int4")
+    t8 = throughput.comefa_mac_throughput(R.COMEFA_D, "int8")
+    t16 = throughput.comefa_mac_throughput(R.COMEFA_D, "int16")
+    assert t4 > t8 > t16
+
+
+# ---------------------------------------------------------------------------
+# Fig 9: benchmark speedups
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bench,variant", [
+    (b, v) for b, d in perf.PAPER_SPEEDUPS.items() for v in d])
+def test_fig9_speedups(bench, variant):
+    res = perf.run_all()
+    got = res[bench][variant]
+    target = perf.PAPER_SPEEDUPS[bench][variant]
+    if target == 0.0:
+        assert got == 0.0
+    else:
+        assert abs(got - target) / target < 0.15, (bench, variant, got, target)
+
+
+def test_fig9_eltwise_is_dram_bound():
+    """No speedup while the DRAM restriction is in place - structural."""
+    for v in ("comefa-d", "comefa-a"):
+        assert perf.eltwise(v).speedup == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fig 11: co-mapping sweep has an interior sweet spot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["comefa-d", "comefa-a"])
+def test_fig11_comapping_sweet_spot(variant):
+    sweep = perf.comapping_sweep(variant)
+    speedups = [s for _, s in sweep]
+    assert speedups[0] == pytest.approx(1.0)
+    best = max(range(len(speedups)), key=lambda i: speedups[i])
+    assert 0 < best < len(speedups) - 1          # interior optimum
+    assert speedups[best] > 1.2                  # meaningful gain at the spot
+
+
+def test_fig11_sweet_spot_differs_by_variant():
+    best_d = max(perf.comapping_sweep("comefa-d"), key=lambda t: t[1])[0]
+    best_a = max(perf.comapping_sweep("comefa-a"), key=lambda t: t[1])[0]
+    assert best_d > best_a                       # faster RAMs take more work
+
+
+# ---------------------------------------------------------------------------
+# Fig 12: reduction precision sweep
+# ---------------------------------------------------------------------------
+
+def test_fig12_endpoints():
+    d4 = perf.reduction("comefa-d", bits=4).speedup
+    d20 = perf.reduction("comefa-d", bits=20).speedup
+    a4 = perf.reduction("comefa-a", bits=4).speedup
+    a20 = perf.reduction("comefa-a", bits=20).speedup
+    assert abs(d4 - 5.3) / 5.3 < 0.15
+    assert abs(d20 - 2.7) / 2.7 < 0.15
+    assert abs(a4 - 3.3) / 3.3 < 0.15
+    assert abs(a20 - 1.7) / 1.7 < 0.15
+
+
+def test_fig12_monotone_decreasing():
+    for v in ("comefa-d", "comefa-a"):
+        sp = [perf.reduction(v, bits=p).speedup for p in range(4, 21, 4)]
+        assert all(a > b for a, b in zip(sp, sp[1:]))
+
+
+def test_fig12_comefa_d_beats_ccb_slightly():
+    """Paper: 'CoMeFa-D is 3% better than CCB owing to improved frequency'."""
+    d = perf.reduction("comefa-d", bits=4).speedup
+    c = perf.reduction("ccb", bits=4).speedup
+    assert d > c
+    assert (d - c) / c < 0.2
+
+
+# ---------------------------------------------------------------------------
+# Fig 10: energy savings
+# ---------------------------------------------------------------------------
+
+def test_fig10_max_savings_match_paper():
+    s = energy.all_savings()
+    max_d = max(d["comefa-d"] for d in s.values())
+    max_a = max(d["comefa-a"] for d in s.values())
+    assert abs(max_d - 0.52) < 0.03
+    assert abs(max_a - 0.56) < 0.03
+
+
+def test_fig10_all_omb_benches_save_energy():
+    for bench, d in energy.all_savings().items():
+        for v, saving in d.items():
+            assert 0.2 < saving < 0.7, (bench, v, saving)
+
+
+# ---------------------------------------------------------------------------
+# Tables III / IV: area
+# ---------------------------------------------------------------------------
+
+def test_table3_breakdowns_sum_to_100():
+    for variant, d in area.TABLE_III.items():
+        assert sum(d.values()) == pytest.approx(100.0, abs=0.5), variant
+
+
+def test_table4_block_tile_consistency():
+    """overhead_um2 / overhead_frac implies the same baseline tile area."""
+    t_d = area.baseline_bram_tile_um2("comefa-d")
+    t_a = area.baseline_bram_tile_um2("comefa-a")
+    assert abs(t_d - t_a) / t_d < 0.01
+
+
+@pytest.mark.parametrize("variant,target", [
+    ("comefa-d", 0.038), ("comefa-a", 0.012)])
+def test_table4_chip_overheads(variant, target):
+    got = area.chip_overhead(variant)
+    assert abs(got - target) < 0.002, (variant, got)
+
+
+def test_table4_ccb_properties():
+    assert area.TABLE_IV["practicality"]["comefa-a"] == "high"
+    assert area.TABLE_IV["parallelism"]["ccb"] == 128
+    assert not area.TABLE_IV["float_support"]["ccb"]

@@ -1,0 +1,142 @@
+"""End-to-end training loop tests: loss decreases, checkpoint/restart
+resumes exactly, straggler watchdog fires, serving generates."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import common, lm
+from repro.serve import engine
+from repro.train import loop as loop_mod
+from repro.train import optimizer as opt
+from repro.train import step as step_mod
+
+
+def _setup(tmp_path, total_steps=24, arch="smollm-360m", microbatches=1):
+    cfg = common.reduced(configs.get(arch), vocab=128, n_layers=2)
+    tcfg = step_mod.TrainConfig(
+        adamw=opt.AdamWConfig(lr=3e-3, warmup_steps=5,
+                              total_steps=total_steps),
+        microbatches=microbatches)
+    lcfg = loop_mod.LoopConfig(total_steps=total_steps, ckpt_every=8,
+                               ckpt_dir=str(tmp_path), log_every=100)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, global_batch=8,
+                                  seq_len=64, seed=5))
+    return cfg, tcfg, lcfg, data
+
+
+def test_loss_decreases(tmp_path):
+    cfg, tcfg, lcfg, data = _setup(tmp_path)
+    tr = loop_mod.Trainer(cfg, tcfg, lcfg, data)
+    state = tr.init_or_restore()
+    losses = []
+    tr.run(state, on_step=lambda s, st, m: losses.append(float(m["loss"])))
+    first = np.mean(losses[:4])
+    last = np.mean(losses[-4:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    cfg, tcfg, lcfg, data = _setup(tmp_path, total_steps=16)
+    # phase 1: run 16 steps (checkpoints at 8 and 16)
+    tr1 = loop_mod.Trainer(cfg, tcfg, lcfg, data)
+    s1 = tr1.run(tr1.init_or_restore())
+    # phase 2: "crash" and restart with a higher target
+    lcfg2 = dataclasses.replace(lcfg, total_steps=20)
+    tr2 = loop_mod.Trainer(cfg, tcfg, lcfg2, data)
+    state = tr2.init_or_restore()
+    assert int(state["step"]) == 16               # resumed, not restarted
+    s2 = tr2.run(state)
+    assert int(s2["step"]) == 20
+
+
+def test_restart_is_bitwise_deterministic(tmp_path):
+    """run(0..12) == run(0..8) + restart + run(8..12): no data loss/dup."""
+    cfg, tcfg, lcfg, data = _setup(tmp_path, total_steps=12)
+    lcfg = dataclasses.replace(lcfg, ckpt_every=4,
+                               ckpt_dir=str(tmp_path / "a"))
+    tr = loop_mod.Trainer(cfg, tcfg, lcfg, data)
+    s_full = tr.run(tr.init_or_restore())
+
+    lcfg_b8 = dataclasses.replace(lcfg, total_steps=8,
+                                  ckpt_dir=str(tmp_path / "b"))
+    trb = loop_mod.Trainer(cfg, tcfg, lcfg_b8, data)
+    trb.run(trb.init_or_restore())
+    lcfg_b12 = dataclasses.replace(lcfg_b8, total_steps=12)
+    trb2 = loop_mod.Trainer(cfg, tcfg, lcfg_b12, data)
+    sb = trb2.init_or_restore()
+    assert int(sb["step"]) == 8
+    s_resumed = trb2.run(sb)
+
+    for a, b in zip(jax.tree.leaves(s_full["params"]),
+                    jax.tree.leaves(s_resumed["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_straggler_watchdog(tmp_path):
+    cfg, tcfg, lcfg, data = _setup(tmp_path, total_steps=10)
+    tr = loop_mod.Trainer(cfg, tcfg, lcfg, data)
+    state = tr.init_or_restore()
+    import time
+    slow = {"done": False}
+
+    def on_step(step, st, m):
+        if step == 8 and not slow["done"]:
+            slow["done"] = True
+            time.sleep(max(0.5, 5 * np.median(tr.step_times)))
+    # inject the sleep inside the timed region by wrapping the step fn
+    orig = tr.step_fn
+
+    def slow_step(s, b):
+        out = orig(s, b)
+        if int(s["step"]) == 8:
+            time.sleep(max(0.5, 5 * float(np.median(tr.step_times))))
+        return out
+
+    tr.step_fn = slow_step
+    tr.run(state)
+    assert tr.straggler_events >= 1
+
+
+def test_microbatched_matches_unbatched(tmp_path):
+    """Grad accumulation is numerics-preserving (equal micro slices)."""
+    cfg, tcfg1, lcfg, data = _setup(tmp_path, total_steps=1)
+    tcfg4 = dataclasses.replace(tcfg1, microbatches=4)
+    batch = data.batch_at(0)
+    s1 = step_mod.init_state(jax.random.PRNGKey(0), cfg, tcfg1)
+    s4 = step_mod.init_state(jax.random.PRNGKey(0), cfg, tcfg4)
+    n1, m1 = step_mod.train_step(s1, batch, cfg, tcfg1)
+    n4, m4 = step_mod.train_step(s4, batch, cfg, tcfg4)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(n1["params"]),
+                    jax.tree.leaves(n4["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_generate_produces_tokens():
+    cfg = common.reduced(configs.get("smollm-360m"), vocab=64, n_layers=2)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out = engine.generate(params, prompt, cfg, steps=5, max_len=16)
+    assert out.shape == (2, 5)
+    assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab
+
+
+def test_generate_greedy_matches_forward_argmax():
+    cfg = common.reduced(configs.get("smollm-360m"), vocab=64, n_layers=2,
+                         dtype="float32")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out = engine.generate(params, prompt, cfg, steps=1, max_len=8)
+    logits, _ = lm.forward(params, prompt, cfg)
+    expect = jnp.argmax(logits[:, -1], -1)
+    assert int(out[0, 0]) == int(expect[0])
