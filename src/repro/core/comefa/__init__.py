@@ -1,9 +1,13 @@
-"""CoMeFa compute-in-memory RAM: ISA, bit-level simulator, programs, timing."""
-from . import isa, layout, program, timing
+"""CoMeFa compute-in-memory RAM: ISA, IR, bit-level simulator, programs,
+timing."""
+from . import ir, isa, layout, program, timing
 from .block import ComefaArray, ROW_ONES, ROW_ZEROS
+from .ir import Operand, Program, RowAllocator
 from .isa import Instr, N_COLS, N_ROWS, WORD_BITS
+from .program import ProgramBuilder
 
 __all__ = [
-    "isa", "layout", "program", "timing", "ComefaArray", "Instr",
+    "ir", "isa", "layout", "program", "timing", "ComefaArray", "Instr",
+    "Program", "ProgramBuilder", "RowAllocator", "Operand",
     "N_COLS", "N_ROWS", "WORD_BITS", "ROW_ONES", "ROW_ZEROS",
 ]

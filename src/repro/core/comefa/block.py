@@ -27,27 +27,32 @@ Semantics fixed here (paper leaves them implicit):
     therefore still see a previously stored carry;
   * W2's "carry" source is the latched (pre-update) carry, so an add's
     final carry-out is stored by a following instruction with c_en=0;
-  * one write per cycle (either port's write path), to `dst_row`.
+  * each cycle retires one write per *port*: W1 to `dst_row`, W2 to
+    `dst2_row` (== dst_row for plain instructions; the IR co-issue pass
+    packs an independent Port-B write into an otherwise W2-idle cycle,
+    exploiting the true-dual-port concurrency).
+
+Programs are executed through a keyed encode cache: `run()` accepts an
+`ir.Program` (which caches its own engine matrix), a raw `list[Instr]`, or
+a pre-encoded matrix, and repeated invocations of structurally equal
+programs skip re-encoding entirely.  `run_programs()` concatenates several
+programs into a single `lax.scan` dispatch.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import isa
-from .isa import (COL_MUX, N_COLS, N_ROWS, WORD_BITS, Instr, encode_program)
+from . import ir, isa
+from .isa import (COL_MUX, N_COLS, N_ROWS, ROW_ONES, ROW_ZEROS, WORD_BITS,
+                  Instr, encode_program)
 
 # field indices in the encoded program matrix
-_F = {name: i for i, name in enumerate(isa.FIELD_NAMES)}
-
-# Reserved constant rows, initialised by `ComefaArray.reset()` and used by
-# program generators (e.g. carry presetting for subtraction).
-ROW_ONES = N_ROWS - 1   # row 127: all ones
-ROW_ZEROS = N_ROWS - 2  # row 126: all zeros
+_F = {name: i for i, name in enumerate(isa.ENGINE_FIELD_NAMES)}
 
 
 def _step(chain: bool, state, fields):
@@ -69,6 +74,8 @@ def _step(chain: bool, state, fields):
     m_en = fields[_F["m_en"]]
     ext_bit = fields[_F["ext_bit"]]
     b_ext = fields[_F["b_ext"]]
+    dst2 = fields[_F["dst2_row"]]
+    pred2_sel = fields[_F["pred2_sel"]]
 
     # ---- phase 1: read (one row per port) -------------------------------
     a = jnp.take(mem, src1, axis=1)                      # [nb, C]
@@ -84,11 +91,16 @@ def _step(chain: bool, state, fields):
     carry_next = jnp.where(c_en == 1, cgen, carry)
     mask_next = jnp.where(m_en == 1, tr, mask)
 
-    # predication uses the *latched* (previous-cycle) mask / carry
-    pred = jnp.select(
-        [pred_sel == isa.PRED_ALWAYS, pred_sel == isa.PRED_MASK,
-         pred_sel == isa.PRED_CARRY, pred_sel == isa.PRED_NOT_CARRY],
-        [jnp.ones_like(mask), mask, carry, 1 - carry])
+    # predication uses the *latched* (previous-cycle) mask / carry; each
+    # write port has its own predicate select (identical unless co-issued)
+    def _pred(sel):
+        return jnp.select(
+            [sel == isa.PRED_ALWAYS, sel == isa.PRED_MASK,
+             sel == isa.PRED_CARRY, sel == isa.PRED_NOT_CARRY],
+            [jnp.ones_like(mask), mask, carry, 1 - carry])
+
+    pred = _pred(pred_sel)
+    pred2 = _pred(pred2_sel)
 
     # ---- phase 3: write-back -------------------------------------------
     # neighbour S values for shifts; chain=True threads corner PEs of
@@ -107,16 +119,20 @@ def _step(chain: bool, state, fields):
     val1 = jnp.select(
         [w1_sel == isa.W1_S, w1_sel == isa.W1_DIN, w1_sel == isa.W1_RIGHT],
         [s, jnp.zeros_like(s), from_right])             # d_in handled off-line
+    # W2 carry source is the raw latch (pre-update); W2_ZERO drives 0
     val2 = jnp.select(
-        [w2_sel == isa.W2_CARRY, w2_sel == isa.W2_DIN, w2_sel == isa.W2_LEFT],
-        [c_in, jnp.zeros_like(s), from_left])
+        [w2_sel == isa.W2_CARRY, w2_sel == isa.W2_DIN,
+         w2_sel == isa.W2_LEFT, w2_sel == isa.W2_ZERO],
+        [carry, jnp.zeros_like(s), from_left, jnp.zeros_like(s)])
 
-    old_row = jnp.take(mem, dst, axis=1)
     we1 = (pred & wp1).astype(jnp.uint8)
-    we2 = (pred & wp2).astype(jnp.uint8)
-    new_row = jnp.where(we1 == 1, val1.astype(jnp.uint8), old_row)
-    new_row = jnp.where(we2 == 1, val2.astype(jnp.uint8), new_row)
-    mem = mem.at[:, dst, :].set(new_row)
+    we2 = (pred2 & wp2).astype(jnp.uint8)
+    old1 = jnp.take(mem, dst, axis=1)
+    mem = mem.at[:, dst, :].set(
+        jnp.where(we1 == 1, val1.astype(jnp.uint8), old1))
+    old2 = jnp.take(mem, dst2, axis=1)
+    mem = mem.at[:, dst2, :].set(
+        jnp.where(we2 == 1, val2.astype(jnp.uint8), old2))
 
     return (mem, carry_next.astype(jnp.uint8), mask_next.astype(jnp.uint8)), None
 
@@ -126,6 +142,65 @@ def _run(mem, carry, mask, prog, chain: bool):
     (mem, carry, mask), _ = jax.lax.scan(
         functools.partial(_step, chain), (mem, carry, mask), prog)
     return mem, carry, mask
+
+
+# ---------------------------------------------------------------------------
+# keyed encode cache: structurally-equal programs encode once
+# ---------------------------------------------------------------------------
+
+_ENCODE_CACHE: dict = {}
+_ENCODE_CACHE_MAX = 512
+ENCODE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _encode_cached(key, producer) -> np.ndarray:
+    mat = _ENCODE_CACHE.get(key)
+    if mat is not None:
+        ENCODE_CACHE_STATS["hits"] += 1
+        return mat
+    ENCODE_CACHE_STATS["misses"] += 1
+    mat = producer()
+    if len(_ENCODE_CACHE) >= _ENCODE_CACHE_MAX:
+        _ENCODE_CACHE.pop(next(iter(_ENCODE_CACHE)))   # FIFO eviction
+    _ENCODE_CACHE[key] = mat
+    return mat
+
+
+def _widen_legacy(mat: np.ndarray) -> np.ndarray:
+    """Legacy [T, N_FIELDS] matrix -> engine width, same semantics.
+
+    Mirrors `Instr.engine_vector`: dst2/pred2 mirror dst/pred, and a
+    W2_CARRY write with c_rst=1 (which historically wrote the gated
+    carry input, i.e. 0) becomes W2_ZERO under the raw-latch source.
+    """
+    mat = mat.copy()
+    legacy_zero = ((mat[:, _F["wp2_en"]] == 1)
+                   & (mat[:, _F["w2_sel"]] == isa.W2_CARRY)
+                   & (mat[:, _F["c_rst"]] == 1))
+    mat[legacy_zero, _F["w2_sel"]] = isa.W2_ZERO
+    dst = mat[:, _F["dst_row"]:_F["dst_row"] + 1]
+    pred = mat[:, _F["pred_sel"]:_F["pred_sel"] + 1]
+    return np.concatenate([mat, dst, pred], axis=1)
+
+
+def encoded(program) -> np.ndarray:
+    """Engine field matrix for any program form, through the keyed cache.
+
+    Accepts an `ir.Program` (fingerprinted by its slot structure), a raw
+    `Instr` sequence (fingerprinted by the instruction tuple), or an
+    already-encoded int32 matrix (returned as-is; a legacy
+    ``[T, N_FIELDS]`` matrix is widened with dst2/pred2 columns).
+    """
+    if isinstance(program, np.ndarray):
+        if program.shape[0] and program.shape[1] == isa.N_FIELDS:
+            return _widen_legacy(program)
+        if program.shape[0] == 0:
+            return np.zeros((0, isa.N_ENGINE_FIELDS), np.int32)
+        return program
+    if isinstance(program, ir.Program):
+        return _encode_cached(program.key, program.encode)
+    instrs = tuple(program)
+    return _encode_cached(instrs, lambda: encode_program(instrs))
 
 
 class ComefaArray:
@@ -181,16 +256,35 @@ class ComefaArray:
 
     # -- execution ---------------------------------------------------------
     def run(self, program) -> int:
-        """Execute a program (list[Instr] or encoded matrix). Returns cycles."""
-        if not isinstance(program, np.ndarray):
-            program = encode_program(program)
-        if program.shape[0] == 0:
+        """Execute a program. Returns processing cycles.
+
+        Accepts an `ir.Program`, a `list[Instr]`, or an encoded matrix;
+        encoding goes through the keyed cache, so repeated kernel
+        invocations of structurally equal programs skip re-encoding.
+        """
+        return self._dispatch(encoded(program))
+
+    def run_programs(self, programs) -> List[int]:
+        """Execute several programs back-to-back in ONE scan dispatch.
+
+        The encoded matrices are concatenated so `lax.scan` traces and
+        dispatches once for the whole batch (one trace per total shape,
+        not one per program).  Returns per-program cycle counts.
+        """
+        mats = [encoded(p) for p in programs]
+        if not mats:
+            return []
+        self._dispatch(np.concatenate(mats, axis=0))
+        return [int(m.shape[0]) for m in mats]
+
+    def _dispatch(self, mat: np.ndarray) -> int:
+        if mat.shape[0] == 0:
             return 0
         mem, carry, mask = _run(
             jnp.asarray(self.mem), jnp.asarray(self.carry),
-            jnp.asarray(self.mask), jnp.asarray(program), self.chain)
+            jnp.asarray(self.mask), jnp.asarray(mat), self.chain)
         self.mem = np.asarray(mem)
         self.carry = np.asarray(carry)
         self.mask = np.asarray(mask)
-        self.cycles += int(program.shape[0])
-        return int(program.shape[0])
+        self.cycles += int(mat.shape[0])
+        return int(mat.shape[0])

@@ -1,0 +1,598 @@
+"""First-class program IR for CoMeFa instruction streams.
+
+The paper's "instruction generation FSM" (Sec. III-D) emits bit-serial
+schedules; this module treats those schedules as *compiled artifacts* rather
+than flat instruction lists:
+
+  * `Program`    - the IR container: an ordered list of *slots*, each slot
+                   holding one or two `isa.Instr` that retire in a single
+                   processing cycle.  Carries effect metadata, an optional
+                   live-out row set, and caches of its engine encoding and a
+                   structural fingerprint (keying the simulator's encode
+                   cache in `block.py`).
+  * `RowAllocator` / `Operand`
+                 - a register-file allocator for row operands, replacing the
+                   hand-threaded `Rows` index lists of the seed code.
+  * passes       - `fold_constant_rows` (Sec. III-B: the reserved all-ones /
+                   all-zeros rows plus in-program constant tracking),
+                   `eliminate_dead_writes` (scratch writes never observed at
+                   program exit), and `coissue_dual_port` (Sec. II-A/III-A:
+                   the true-dual-port BRAM has two independent write paths,
+                   W1 on Port A and W2 on Port B, but the flat encoding only
+                   ever used one per cycle - this pass packs an independent
+                   W2 write into an adjacent cycle's idle Port B).
+
+Effect metadata is *derived* from the instruction fields, conservatively:
+over-approximated reads and under-approximated kills, so every pass is
+sound by construction.  `tests/test_ir.py` asserts optimized programs are
+bit-identical in memory/latch state to their unoptimized forms on random
+operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import isa
+from .isa import (Instr, N_ROWS, PRED_ALWAYS, PRED_CARRY, PRED_MASK,
+                  PRED_NOT_CARRY, ROW_ONES, ROW_ZEROS, TT_ONE, TT_ZERO,
+                  W1_RIGHT, W1_S, W2_CARRY, W2_ZERO)
+
+Slot = Tuple[Instr, ...]          # 1 instr, or 2 fused into one cycle
+
+
+# ---------------------------------------------------------------------------
+# effect metadata
+# ---------------------------------------------------------------------------
+
+def _tt_swap_ab(tt: int) -> int:
+    """Truth table with the A/B operand roles exchanged."""
+    return ((tt & 0b1001)
+            | ((tt >> 1) & 0b0010)        # f(1,0) <- old f(0,1)
+            | ((tt << 1) & 0b0100))       # f(0,1) <- old f(1,0)
+
+
+def _tt_fix_a(tt: int, a: int) -> int:
+    """Truth table specialised to a constant A: result depends on B only."""
+    t0 = (tt >> ((a << 1) | 0)) & 1
+    t1 = (tt >> ((a << 1) | 1)) & 1
+    return t0 | (t1 << 1) | (t0 << 2) | (t1 << 3)
+
+
+def _tt_fix_b(tt: int, b: int) -> int:
+    """Truth table specialised to a constant B: result depends on A only."""
+    t0 = (tt >> ((0 << 1) | b)) & 1
+    t1 = (tt >> ((1 << 1) | b)) & 1
+    return t0 | (t0 << 1) | (t1 << 2) | (t1 << 3)
+
+
+def _tt_uses_a(tt: int) -> bool:
+    return _tt_fix_a(tt, 0) != _tt_fix_a(tt, 1)
+
+
+def _tt_uses_b(tt: int) -> bool:
+    return _tt_fix_b(tt, 0) != _tt_fix_b(tt, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Effects:
+    """Row/latch effects of one instruction (conservative)."""
+    reads: frozenset          # rows whose values feed the PE or a write mux
+    writes: frozenset         # rows possibly written (may-write: predicated)
+    full_writes: frozenset    # rows written in every lane (pred = ALWAYS)
+    reads_carry: bool
+    writes_carry: bool
+    reads_mask: bool
+    writes_mask: bool
+
+
+def instr_effects(i: Instr) -> Effects:
+    """Derive the effect set of one instruction from its fields.
+
+    Reads are over-approximated (a row is listed whenever its value *could*
+    influence state); full_writes are under-approximated (only unpredicated
+    writes kill a row) - the safe directions for every pass below.
+    """
+    reads = set()
+    # the PE's A/B inputs feed TR (used by S -> the W1/W2 shift write paths
+    # and the mask latch) and CGEN (used when the carry latch updates)
+    consumes_tr = ((i.wp1_en and i.w1_sel in (W1_S, W1_RIGHT)) or i.m_en
+                   or (i.wp2_en and i.w2_sel == isa.W2_LEFT))
+    if i.c_en or consumes_tr:
+        a_used = i.c_en or _tt_uses_a(i.truth_table)
+        b_used = i.c_en or _tt_uses_b(i.truth_table)
+        if a_used:
+            reads.add(i.src1_row)
+        if b_used and not i.b_ext:
+            reads.add(i.src2_row)
+    writes = set()
+    if i.wp1_en or i.wp2_en:
+        writes.add(i.dst_row)
+    full = set(writes) if i.pred_sel == PRED_ALWAYS else set()
+    reads_carry = (i.pred_sel in (PRED_CARRY, PRED_NOT_CARRY)
+                   or (i.wp2_en and i.w2_sel == W2_CARRY and not i.c_rst)
+                   or (i.c_en and not i.c_rst)
+                   or (consumes_tr and not i.c_rst))   # S = TR ^ c_in
+    return Effects(frozenset(reads), frozenset(writes), frozenset(full),
+                   reads_carry=reads_carry, writes_carry=bool(i.c_en),
+                   reads_mask=i.pred_sel == PRED_MASK,
+                   writes_mask=bool(i.m_en))
+
+
+# ---------------------------------------------------------------------------
+# row-register allocation
+# ---------------------------------------------------------------------------
+
+class Operand(tuple):
+    """A named, allocated group of rows - usable anywhere `Rows` is.
+
+    Behaves as a tuple of row indices (LSB first), so the program
+    generators, `layout.place` and slicing all work unchanged.
+    """
+    name: str
+
+    def __new__(cls, rows: Iterable[int], name: str = "t"):
+        self = super().__new__(cls, rows)
+        self.name = name
+        return self
+
+    @property
+    def base(self) -> int:
+        return self[0]
+
+    @property
+    def n_bits(self) -> int:
+        return len(self)
+
+    def __repr__(self):
+        return f"Operand({self.name}: rows {list(self)})"
+
+
+class RowAllocator:
+    """Register-file allocator for the 128 wordlines of one block.
+
+    Replaces the seed's hand-threaded `list(range(...))` row bookkeeping:
+    operands are allocated contiguously (so `layout.place(arr, v, op.base,
+    op.n_bits)` works), freed explicitly or via `scratch()`, and the
+    reserved constant rows are never handed out.
+    """
+
+    def __init__(self, n_rows: int = N_ROWS,
+                 reserved: Sequence[int] = (ROW_ZEROS, ROW_ONES)):
+        self.n_rows = n_rows
+        self._free = sorted(set(range(n_rows)) - set(reserved))
+        self._reserved = tuple(reserved)
+        self._allocated = set()
+
+    @classmethod
+    def from_rows(cls, rows: Sequence[int]) -> "RowAllocator":
+        """An allocator over an explicit row pool (e.g. caller scratch)."""
+        a = cls.__new__(cls)
+        a.n_rows = N_ROWS
+        a._free = sorted(set(rows))
+        a._reserved = ()
+        a._allocated = set()
+        return a
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n_bits: int, name: str = "t",
+              contiguous: bool = True) -> Operand:
+        """Allocate `n_bits` rows - contiguous (first fit) by default, so
+        `layout.place(arr, v, op.base, op.n_bits)` works on the result."""
+        free = self._free
+        if not contiguous:
+            if len(free) < n_bits:
+                raise MemoryError(f"{n_bits} rows requested, "
+                                  f"{len(free)} free")
+            rows = free[:n_bits]
+            del free[:n_bits]
+            self._allocated.update(rows)
+            return Operand(rows, name)
+        run = 0
+        for idx in range(len(free)):
+            run = run + 1 if (idx and free[idx] == free[idx - 1] + 1) else 1
+            if run == n_bits:
+                start = idx - n_bits + 1
+                rows = free[start:idx + 1]
+                del free[start:idx + 1]
+                self._allocated.update(rows)
+                return Operand(rows, name)
+        raise MemoryError(
+            f"no contiguous run of {n_bits} rows free "
+            f"({len(free)} fragmented rows left)")
+
+    def free(self, op: Sequence[int]) -> None:
+        for r in op:
+            if r not in self._allocated:
+                raise ValueError(
+                    f"row {r} not allocated from this allocator "
+                    f"(double free, foreign operand, or reserved row)")
+        self._allocated.difference_update(op)
+        self._free = sorted(set(self._free) | set(op))
+
+    def scratch(self, n_bits: int, name: str = "scratch"):
+        """Context manager: temporary operand, freed on exit."""
+        alloc = self
+
+        class _Scratch:
+            def __enter__(self_inner):
+                self_inner.op = alloc.alloc(n_bits, name)
+                return self_inner.op
+
+            def __exit__(self_inner, *exc):
+                alloc.free(self_inner.op)
+                return False
+
+        return _Scratch()
+
+
+# ---------------------------------------------------------------------------
+# the Program IR container
+# ---------------------------------------------------------------------------
+
+class Program:
+    """An instruction stream as a first-class, optimisable object.
+
+    List-like over `Instr` (append / extend / += / + / iteration), so the
+    generator style of `program.py` keeps working, but internally an ordered
+    list of *slots*: after `optimize()` a slot may hold two instructions
+    that retire in one cycle via the dual write ports.  `len(p)` and
+    `p.cycles` count slots, i.e. processing cycles.
+    """
+
+    __slots__ = ("_slots", "name", "live_out", "_encoded", "_key")
+
+    def __init__(self, instrs: Iterable[Instr] = (), name: str = "prog",
+                 live_out: Optional[Iterable[int]] = None):
+        self._slots: List[Slot] = [(i,) for i in instrs]
+        self.name = name
+        self.live_out = frozenset(live_out) if live_out is not None else None
+        self._encoded: Optional[np.ndarray] = None
+        self._key = None
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_slots(cls, slots: Sequence[Slot], name: str = "prog",
+                   live_out=None) -> "Program":
+        p = cls(name=name, live_out=live_out)
+        p._slots = list(slots)
+        return p
+
+    def _dirty(self):
+        self._encoded = None
+        self._key = None
+
+    def append(self, instr: Instr) -> None:
+        self._slots.append((instr,))
+        self._dirty()
+
+    def extend(self, instrs: Iterable[Instr]) -> None:
+        if isinstance(instrs, Program):
+            self._slots.extend(instrs._slots)
+        else:
+            self._slots.extend((i,) for i in instrs)
+        self._dirty()
+
+    def __iadd__(self, other) -> "Program":
+        self.extend(other)
+        return self
+
+    def __add__(self, other) -> "Program":
+        p = Program.from_slots(list(self._slots), name=self.name,
+                               live_out=self.live_out)
+        p.extend(other)
+        return p
+
+    def __radd__(self, other) -> "Program":
+        p = Program(other if not isinstance(other, Program) else ())
+        p.extend(self)
+        return p
+
+    # -- inspection --------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    @property
+    def cycles(self) -> int:
+        return len(self._slots)
+
+    @property
+    def slots(self) -> Tuple[Slot, ...]:
+        return tuple(self._slots)
+
+    def instrs(self) -> List[Instr]:
+        """Flattened instruction list in original program order."""
+        return [i for slot in self._slots for i in slot]
+
+    def __iter__(self):
+        return iter(self.instrs())
+
+    @property
+    def n_instrs(self) -> int:
+        return sum(len(s) for s in self._slots)
+
+    @property
+    def is_fused(self) -> bool:
+        return any(len(s) > 1 for s in self._slots)
+
+    def with_live_out(self, rows: Iterable[int]) -> "Program":
+        """Same program, annotated with the rows observed after it runs."""
+        p = Program.from_slots(list(self._slots), name=self.name,
+                               live_out=frozenset(rows))
+        return p
+
+    def __repr__(self):
+        fused = sum(1 for s in self._slots if len(s) > 1)
+        return (f"Program({self.name!r}: {self.n_instrs} instrs in "
+                f"{self.cycles} cycles, {fused} co-issued)")
+
+    # -- encode cache ------------------------------------------------------
+    @property
+    def key(self) -> Tuple:
+        """Structural fingerprint: keys the simulator's encode cache."""
+        if self._key is None:
+            self._key = tuple(self._slots)
+        return self._key
+
+    def encode(self) -> np.ndarray:
+        """Engine field matrix [cycles, N_ENGINE_FIELDS] (cached)."""
+        if self._encoded is None:
+            if not self._slots:
+                self._encoded = np.zeros((0, isa.N_ENGINE_FIELDS), np.int32)
+            else:
+                self._encoded = np.array(
+                    [_slot_vector(s) for s in self._slots], dtype=np.int32)
+        return self._encoded
+
+    # -- optimisation ------------------------------------------------------
+    def optimize(self, passes: Optional[Sequence] = None,
+                 live_out: Optional[Iterable[int]] = None) -> "Program":
+        """Run the pass pipeline; returns a new, semantically equal Program.
+
+        Default pipeline: constant-row folding -> dead-write elimination
+        (needs a live-out annotation to do anything) -> dual-port co-issue.
+        """
+        if passes is None:
+            passes = DEFAULT_PASSES
+        lo = frozenset(live_out) if live_out is not None else self.live_out
+        if self.is_fused:
+            # already scheduled: the passes operate on unfused slots, and
+            # re-running them cannot improve the schedule - idempotent no-op
+            return Program.from_slots(list(self._slots), name=self.name,
+                                      live_out=lo)
+        slots: List[Slot] = [tuple(s) for s in self._slots]
+        for p in passes:
+            slots = p(slots, live_out=lo)
+        return Program.from_slots(slots, name=self.name + "+opt",
+                                  live_out=lo)
+
+
+def _slot_vector(slot: Slot) -> List[int]:
+    """Merge a slot's 1-2 instructions into one engine field vector."""
+    if len(slot) == 1:
+        return slot[0].engine_vector()
+    a, b = slot
+    w = a if (a.wp2_en and not a.wp1_en) else b       # the W2 side
+    c = b if w is a else a                            # the compute/W1 side
+    v = c.engine_vector()
+    names = isa.ENGINE_FIELD_NAMES
+    v[names.index("wp2_en")] = 1
+    v[names.index("w2_sel")] = (W2_ZERO if (w.w2_sel == W2_CARRY and w.c_rst)
+                                else w.w2_sel)
+    v[names.index("dst2_row")] = w.dst_row
+    v[names.index("pred2_sel")] = w.pred_sel
+    return v
+
+
+# ---------------------------------------------------------------------------
+# pass: constant-row folding
+# ---------------------------------------------------------------------------
+
+def fold_constant_rows(slots: List[Slot], live_out=None) -> List[Slot]:
+    """Fold reads of known-constant rows into the instruction itself.
+
+    Tracks row constants through the program, seeded with the reserved
+    all-zeros / all-ones rows the array initialises at reset:
+      * a Port-B read of a constant row becomes an `ext_bit` broadcast
+        (freeing Port B - the OOOR mechanism of Sec. III-I used as a
+        compiler canonicalisation);
+      * a Port-A read of a constant row is swapped to Port B first (the PE's
+        truth table is re-indexed; CGEN is symmetric) then folded the same
+        way, and the truth table is specialised - `copy ROW_ONES` becomes a
+        read-free TT_ONE write, `copy ROW_ZEROS` a TT_ZERO write (which the
+        co-issue pass can retarget onto Port B);
+      * a write of a constant a row is already known to hold is dropped.
+    """
+    known: Dict[int, int] = {ROW_ZEROS: 0, ROW_ONES: 1}
+    out: List[Slot] = []
+    for slot in slots:
+        if len(slot) != 1:
+            raise ValueError("fold_constant_rows must run before co-issue")
+        i = slot[0]
+        uses_a = i.c_en or _tt_uses_a(i.truth_table)
+        uses_b = i.c_en or _tt_uses_b(i.truth_table)
+        # swap a constant A operand onto the B port when B's port is live
+        if (uses_a and i.src1_row in known and not i.b_ext
+                and not (uses_b and i.src2_row in known) and i.c_en == 0
+                and i.w1_sel != W1_RIGHT):
+            i = dataclasses.replace(i, src1_row=i.src2_row,
+                                    src2_row=i.src1_row,
+                                    truth_table=_tt_swap_ab(i.truth_table))
+            uses_a, uses_b = uses_b, uses_a
+        # fold a constant B operand into the ext-bit broadcast
+        if uses_b and not i.b_ext and i.src2_row in known:
+            i = dataclasses.replace(i, b_ext=1, ext_bit=known[i.src2_row])
+        # specialise the truth table against the (now ext) constant B
+        if i.b_ext and i.c_en == 0 and _tt_uses_b(i.truth_table):
+            i = dataclasses.replace(
+                i, truth_table=_tt_fix_b(i.truth_table, i.ext_bit))
+        # constant tracking + redundant-write elimination
+        val = _written_const(i)
+        wrote = instr_effects(i).writes
+        if (val is not None and known.get(i.dst_row) == val
+                and i.c_en == 0 and i.m_en == 0
+                and i.pred_sel == PRED_ALWAYS):
+            continue                                   # row already holds it
+        for r in wrote:
+            known.pop(r, None)
+        if val is not None and i.pred_sel == PRED_ALWAYS:
+            known[i.dst_row] = val
+        out.append((i,))
+    return out
+
+
+def _written_const(i: Instr) -> Optional[int]:
+    """The constant this instruction writes to dst_row, if provable."""
+    if i.wp1_en and not i.wp2_en and i.w1_sel == W1_S and i.c_rst:
+        if i.truth_table == TT_ZERO:
+            return 0
+        if i.truth_table == TT_ONE:
+            return 1
+    if i.wp2_en and not i.wp1_en:
+        if i.w2_sel == W2_ZERO or (i.w2_sel == W2_CARRY and i.c_rst):
+            return 0
+    return None
+
+
+# ---------------------------------------------------------------------------
+# pass: dead-write elimination
+# ---------------------------------------------------------------------------
+
+def eliminate_dead_writes(slots: List[Slot], live_out=None) -> List[Slot]:
+    """Remove writes to rows that are overwritten (or never observed) before
+    any read.  A no-op without a live-out annotation: program exit state is
+    observable through the memory-mode ports, so every row is live at exit
+    unless the program says otherwise.
+    """
+    if live_out is None:
+        return slots
+    live = set(live_out) | {ROW_ZEROS, ROW_ONES}
+    out_rev: List[Slot] = []
+    for slot in reversed(slots):
+        if len(slot) != 1:
+            raise ValueError("eliminate_dead_writes must run before co-issue")
+        i = slot[0]
+        eff = instr_effects(i)
+        if eff.writes and not (eff.writes & live):
+            if eff.writes_carry or eff.writes_mask:
+                # keep the latch update, drop the dead row write
+                i = dataclasses.replace(i, wp1_en=0, wp2_en=0)
+                eff = instr_effects(i)
+            else:
+                continue
+        live -= eff.full_writes
+        live |= eff.reads
+        out_rev.append((i,))
+    return list(reversed(out_rev))
+
+
+# ---------------------------------------------------------------------------
+# pass: dual-port write co-issue
+# ---------------------------------------------------------------------------
+
+def _w2_side_ok(w: Instr) -> bool:
+    """Can `w` ride along on Port B of another cycle?
+
+    It must write only through W2, from a source needing no row read
+    (the latched carry, or constant zero), and must not update a latch.
+    """
+    return (w.wp2_en == 1 and w.wp1_en == 0 and w.c_en == 0 and w.m_en == 0
+            and (w.w2_sel == W2_CARRY or w.w2_sel == W2_ZERO))
+
+
+def _as_w2_zero(i: Instr) -> Optional[Instr]:
+    """Rewrite a W1 zero-write as an equivalent Port-B W2_ZERO write."""
+    if (i.wp1_en == 1 and i.wp2_en == 0 and i.w1_sel == W1_S
+            and i.truth_table == TT_ZERO and i.c_rst == 1
+            and i.c_en == 0 and i.m_en == 0):
+        return Instr(dst_row=i.dst_row, wp2_en=1, w2_sel=W2_ZERO,
+                     pred_sel=i.pred_sel)
+    return None
+
+
+def _can_fuse(first: Instr, second: Instr) -> bool:
+    """Is fusing adjacent (first; second) into one cycle sound?
+
+    Exactly one of the pair must be a free-riding W2 write (`_w2_side_ok`);
+    the other (the compute side C) keeps the PE, latches, and Port A.
+    Soundness conditions per direction are derived in docs/program_ir.md.
+    """
+    for w, c, w_first in ((first, second, True), (second, first, False)):
+        if not _w2_side_ok(w) or c.wp2_en:
+            continue
+        w_reads_carry = w.w2_sel == W2_CARRY and not w.c_rst
+        if w_first:
+            # W originally ran first: it saw pre-cycle latches (engine
+            # semantics match exactly); C must not observe W's write.
+            c_eff = instr_effects(c)
+            if w.dst_row in c_eff.reads:
+                continue
+            if c.wp1_en and c.dst_row == w.dst_row:
+                continue                      # write order would flip
+        else:
+            # W originally ran second: C must not change what W observes.
+            if w_reads_carry and c.c_en:
+                continue
+            if w.pred_sel == PRED_MASK and c.m_en:
+                continue
+            if (w.pred_sel in (PRED_CARRY, PRED_NOT_CARRY)) and c.c_en:
+                continue
+        return True
+    return False
+
+
+def coissue_dual_port(slots: List[Slot], live_out=None) -> List[Slot]:
+    """Greedy adjacent-pair packing of independent W1/W2 writes.
+
+    Walks the program left to right; whenever a cycle's Port-B write path
+    is idle and the neighbouring instruction is (or can be rewritten as) a
+    free-riding Port-B write, the two retire together.  TT_ZERO row clears
+    are retargeted onto Port B (`W2_ZERO`) so that zero/copy-heavy
+    sequences - operand clears, predicated select patterns, multiplier
+    partial-product initialisation - pack two rows per cycle.
+    """
+    out: List[Slot] = []
+    idx = 0
+    while idx < len(slots):
+        slot = slots[idx]
+        if len(slot) != 1 or idx + 1 >= len(slots) \
+                or len(slots[idx + 1]) != 1:
+            out.append(slot)
+            idx += 1
+            continue
+        x, y = slot[0], slots[idx + 1][0]
+        fused = None
+        if _can_fuse(x, y):
+            fused = (x, y)
+        else:
+            # try rewriting one side's W1 zero-write onto Port B
+            y2 = _as_w2_zero(y)
+            if y2 is not None and _can_fuse(x, y2):
+                fused = (x, y2)
+            else:
+                x2 = _as_w2_zero(x)
+                if x2 is not None and _can_fuse(x2, y):
+                    fused = (x2, y)
+        if fused is not None:
+            out.append(fused)
+            idx += 2
+        else:
+            out.append(slot)
+            idx += 1
+    return out
+
+
+DEFAULT_PASSES = (fold_constant_rows, eliminate_dead_writes,
+                  coissue_dual_port)
+
+
+def optimize(program, live_out=None) -> Program:
+    """Convenience: lift a raw instruction list to IR and optimise it."""
+    if not isinstance(program, Program):
+        program = Program(program)
+    return program.optimize(live_out=live_out)

@@ -48,6 +48,11 @@ WORD_BITS = 40        # logical port width in hybrid mode (512 x 40)
 COL_MUX = 4           # column multiplexing factor
 INSTR_ADDR = 0x1FF    # reserved logical address for instructions
 
+# Reserved constant rows, initialised by `ComefaArray.reset()` and relied on
+# by program generators and the IR constant-folding pass (`ir.py`).
+ROW_ONES = N_ROWS - 1   # row 127: all ones
+ROW_ZEROS = N_ROWS - 2  # row 126: all zeros
+
 # truth tables (TR output indexed by (A<<1)|B)
 TT_ZERO = 0b0000
 TT_AND = 0b1000
@@ -78,6 +83,10 @@ W1_RIGHT = 2     # take right neighbour's S  -> left shift
 W2_CARRY = 0
 W2_DIN = 1
 W2_LEFT = 2      # take left neighbour's S   -> right shift
+W2_ZERO = 3      # write driver pulls the bitline low (constant 0).  The
+                 # 40-bit ISA leaves this encoding unused; the IR co-issue
+                 # scheduler uses it to retarget TT_ZERO row clears onto the
+                 # otherwise-idle Port-B write path.
 
 FIELDS = (
     ("src1_row", 0, 7),
@@ -97,6 +106,30 @@ FIELDS = (
 )
 FIELD_NAMES = tuple(f[0] for f in FIELDS)
 N_FIELDS = len(FIELDS)
+
+# ---------------------------------------------------------------------------
+# Engine-level (micro-op) field matrix.
+#
+# The simulator consumes programs as an int32 field matrix whose columns are
+# the ISA fields plus two *engine* fields that exist so the IR scheduler can
+# co-issue an independent Port-B write alongside a Port-A instruction
+# (`ir.coissue_dual_port`):
+#
+#   dst2_row   row written by the Port-B write path (W2).  For a plain
+#              instruction this equals dst_row - both write paths target the
+#              single ISA destination, exactly the old engine behaviour.
+#   pred2_sel  predicate select for the Port-B write driver.  Equals
+#              pred_sel for a plain instruction.
+#
+# A fused micro-op is two 40-bit ISA words retired in one processing cycle:
+# the compute side drives the PE and Port A, the W2 side only consumes the
+# latched carry (or drives zero) and Port B's write port - the Port-A/Port-B
+# concurrency of the true-dual-port BRAM that single-`dst_row` encoding
+# cannot express.
+# ---------------------------------------------------------------------------
+ENGINE_FIELD_NAMES = FIELD_NAMES + ("dst2_row", "pred2_sel")
+N_ENGINE_FIELDS = len(ENGINE_FIELD_NAMES)
+_W2_SEL_IDX = FIELD_NAMES.index("w2_sel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,12 +175,24 @@ class Instr:
     def to_vector(self) -> np.ndarray:
         return np.array([getattr(self, n) for n in FIELD_NAMES], dtype=np.int32)
 
+    def engine_vector(self) -> List[int]:
+        """ISA fields widened with the engine fields (dst2=dst, pred2=pred).
+
+        Legacy fixup: a W2_CARRY write with c_rst=1 historically wrote the
+        *gated* carry input (i.e. 0); the engine's W2 carry source is now the
+        raw latch, so such an instruction is rewritten to W2_ZERO here.
+        """
+        v = [getattr(self, n) for n in FIELD_NAMES]
+        if self.wp2_en and self.w2_sel == W2_CARRY and self.c_rst:
+            v[_W2_SEL_IDX] = W2_ZERO
+        return v + [self.dst_row, self.pred_sel]
+
 
 def encode_program(instrs: Sequence[Instr]) -> np.ndarray:
-    """Program -> int32 field matrix [T, N_FIELDS] consumed by the engine."""
+    """Program -> int32 field matrix [T, N_ENGINE_FIELDS] for the engine."""
     if len(instrs) == 0:
-        return np.zeros((0, N_FIELDS), dtype=np.int32)
-    return np.stack([i.to_vector() for i in instrs])
+        return np.zeros((0, N_ENGINE_FIELDS), dtype=np.int32)
+    return np.array([i.engine_vector() for i in instrs], dtype=np.int32)
 
 
 def program_words(instrs: Sequence[Instr]) -> List[int]:

@@ -1,11 +1,15 @@
 """CoMeFa program generators (the "instruction generation FSM" of Sec. III-D).
 
 Each function assembles the bit-serial instruction sequence for one
-operation, mirroring the algorithms of Sec. III-E/G/I.  Cycle counts are
-the program lengths; `timing.py` holds the paper's closed-form formulas and
-the tests assert the two agree.
+operation, mirroring the algorithms of Sec. III-E/G/I, and emits it as an
+`ir.Program` - a first-class IR object the optimizing assembler passes
+(`ir.py`) and the simulator's encode cache (`block.py`) operate on.
+Unoptimized cycle counts are the program lengths; `timing.py` holds the
+paper's closed-form formulas (which the tests assert agree) plus the
+post-optimization "achieved" counts.
 
-Operand convention: an n-bit operand is a list of n row indices, LSB first.
+Operand convention: an n-bit operand is a list of n row indices, LSB first
+(an `ir.Operand` from a `RowAllocator`, or any plain index sequence).
 All lanes (columns) execute the same program - one program computes 160
 results per block, `n_blocks * 160` results per array.
 """
@@ -13,10 +17,12 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
-from .block import ROW_ONES
+from . import ir
+from .ir import Operand, Program, RowAllocator
 from .isa import (Instr, PRED_ALWAYS, PRED_CARRY, PRED_MASK, PRED_NOT_CARRY,
-                  TT_AND, TT_COPY_A, TT_COPY_B, TT_NOT_A, TT_ONE, TT_OR,
-                  TT_XNOR, TT_XOR, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY, W2_LEFT)
+                  ROW_ONES, TT_AND, TT_COPY_A, TT_COPY_B, TT_NOT_A, TT_ONE,
+                  TT_OR, TT_XNOR, TT_XOR, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY,
+                  W2_LEFT)
 
 Rows = Sequence[int]
 
@@ -29,43 +35,45 @@ def _w1(**kw) -> Instr:
 # register-level primitives
 # ---------------------------------------------------------------------------
 
-def zero_rows(rows: Rows) -> List[Instr]:
+def zero_rows(rows: Rows) -> Program:
     """dst <- 0 (one cycle per row)."""
-    return [_w1(dst_row=r, truth_table=TT_ZERO, c_rst=1) for r in rows]
+    return Program(_w1(dst_row=r, truth_table=TT_ZERO, c_rst=1)
+                   for r in rows)
 
 
-def copy_rows(src: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+def copy_rows(src: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS) -> Program:
     """dst <- src (optionally predicated), one cycle per row."""
-    return [_w1(src1_row=s, dst_row=d, truth_table=TT_COPY_A, c_rst=1,
-                pred_sel=pred_sel) for s, d in zip(src, dst)]
+    return Program(_w1(src1_row=s, dst_row=d, truth_table=TT_COPY_A,
+                       c_rst=1, pred_sel=pred_sel)
+                   for s, d in zip(src, dst))
 
 
 def logic2(src1: Rows, src2: Rows, dst: Rows, tt: int,
-           pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+           pred_sel: int = PRED_ALWAYS) -> Program:
     """Bulk bitwise op: dst <- f(src1, src2). One cycle per row (Sec. V-A)."""
-    return [_w1(src1_row=a, src2_row=b, dst_row=d, truth_table=tt, c_rst=1,
-                pred_sel=pred_sel)
-            for a, b, d in zip(src1, src2, dst)]
+    return Program(_w1(src1_row=a, src2_row=b, dst_row=d, truth_table=tt,
+                       c_rst=1, pred_sel=pred_sel)
+                   for a, b, d in zip(src1, src2, dst))
 
 
 def logic_ext(src1: Rows, dst: Rows, tt: int, ext_bits: Sequence[int],
-              pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+              pred_sel: int = PRED_ALWAYS) -> Program:
     """OOOR bitwise op against an outside operand broadcast bit-by-bit."""
-    return [_w1(src1_row=a, dst_row=d, truth_table=tt, c_rst=1, b_ext=1,
-                ext_bit=e, pred_sel=pred_sel)
-            for a, d, e in zip(src1, dst, ext_bits)]
+    return Program(_w1(src1_row=a, dst_row=d, truth_table=tt, c_rst=1,
+                       b_ext=1, ext_bit=e, pred_sel=pred_sel)
+                   for a, d, e in zip(src1, dst, ext_bits))
 
 
-def preset_carry() -> List[Instr]:
+def preset_carry() -> Program:
     """Force the carry latch to 1 (reads the constant ones row twice)."""
-    return [Instr(src1_row=ROW_ONES, src2_row=ROW_ONES, truth_table=TT_AND,
-                  c_en=1, c_rst=1)]
+    return Program([Instr(src1_row=ROW_ONES, src2_row=ROW_ONES,
+                          truth_table=TT_AND, c_en=1, c_rst=1)])
 
 
-def store_carry(dst_row: int, pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+def store_carry(dst_row: int, pred_sel: int = PRED_ALWAYS) -> Program:
     """Write the latched carry to a row via Port B's write path (mux W2)."""
-    return [Instr(dst_row=dst_row, wp2_en=1, w2_sel=W2_CARRY,
-                  pred_sel=pred_sel)]
+    return Program([Instr(dst_row=dst_row, wp2_en=1, w2_sel=W2_CARRY,
+                          pred_sel=pred_sel)])
 
 
 # ---------------------------------------------------------------------------
@@ -73,14 +81,14 @@ def store_carry(dst_row: int, pred_sel: int = PRED_ALWAYS) -> List[Instr]:
 # ---------------------------------------------------------------------------
 
 def add(a: Rows, b: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS,
-        store_cout: bool = True, preset: bool = False) -> List[Instr]:
+        store_cout: bool = True, preset: bool = False) -> Program:
     """dst <- a + b.  n+1 cycles for n-bit operands (paper Sec. III-E).
 
     dst must have n+1 rows when store_cout (the extra final-carry row).
     `preset` starts the carry chain at 1 (used by `sub`).
     """
     n = len(a)
-    prog: List[Instr] = []
+    prog = Program()
     for i in range(n):
         prog.append(_w1(src1_row=a[i], src2_row=b[i], dst_row=dst[i],
                         truth_table=TT_XOR, c_en=1,
@@ -93,10 +101,10 @@ def add(a: Rows, b: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS,
 
 def add_ext(a: Rows, const_bits: Sequence[int], dst: Rows,
             pred_sel: int = PRED_ALWAYS, store_cout: bool = True,
-            preset: bool = False) -> List[Instr]:
+            preset: bool = False) -> Program:
     """OOOR add: dst <- a + constant (constant streamed bit-serially)."""
     n = len(a)
-    prog: List[Instr] = []
+    prog = Program()
     for i in range(n):
         prog.append(_w1(src1_row=a[i], dst_row=dst[i], truth_table=TT_XOR,
                         b_ext=1, ext_bit=const_bits[i], c_en=1,
@@ -108,7 +116,7 @@ def add_ext(a: Rows, const_bits: Sequence[int], dst: Rows,
 
 
 def sub(a: Rows, b: Rows, dst: Rows, tmp: Rows,
-        store_cout: bool = True) -> List[Instr]:
+        store_cout: bool = True) -> Program:
     """dst <- a - b via a + ~b + 1.  2n+2 cycles (+1 for carry-out row).
 
     The stored carry-out is the *no-borrow* flag: 1 iff a >= b (unsigned).
@@ -121,7 +129,7 @@ def sub(a: Rows, b: Rows, dst: Rows, tmp: Rows,
     return prog
 
 
-def mul(a: Rows, b: Rows, dst: Rows) -> List[Instr]:
+def mul(a: Rows, b: Rows, dst: Rows) -> Program:
     """dst(2n rows) <- a * b (unsigned).  Exactly n^2+3n-2 cycles.
 
     Shift-and-add with mask predication (Sec. III-E):
@@ -132,7 +140,7 @@ def mul(a: Rows, b: Rows, dst: Rows) -> List[Instr]:
     """
     n = len(a)
     assert len(dst) == 2 * n
-    prog: List[Instr] = []
+    prog = Program()
     prog += zero_rows(dst[n:])                              # n
     prog += logic2(b, [a[0]] * n, dst[:n], TT_AND)          # n (iteration 0)
     for i in range(1, n):
@@ -147,7 +155,7 @@ def mul(a: Rows, b: Rows, dst: Rows) -> List[Instr]:
 
 # in-place add of b into acc starting at bit offset `off` (used by dot/OOOR)
 def add_into(acc: Rows, b: Rows, off: int,
-             pred_sel: int = PRED_ALWAYS) -> List[Instr]:
+             pred_sel: int = PRED_ALWAYS) -> Program:
     n = len(b)
     assert off + n <= len(acc)
     seg = list(acc[off:off + n])
@@ -165,7 +173,7 @@ def add_into(acc: Rows, b: Rows, off: int,
 # shifts (Sec. III-F)
 # ---------------------------------------------------------------------------
 
-def shift_lanes(src: Rows, dst: Rows, left: bool = True) -> List[Instr]:
+def shift_lanes(src: Rows, dst: Rows, left: bool = True) -> Program:
     """Shift an operand one *lane* (column) left/right.  One cycle per row.
 
     Left shift: lane i receives lane i+1's bit (data moves toward lane 0),
@@ -173,7 +181,7 @@ def shift_lanes(src: Rows, dst: Rows, left: bool = True) -> List[Instr]:
     neighbour - matching Fig 2/6b.  Block chaining applies when the array
     was built with chain=True.
     """
-    prog = []
+    prog = Program()
     for s, d in zip(src, dst):
         if left:
             prog.append(Instr(src1_row=s, dst_row=d, truth_table=TT_COPY_A,
@@ -189,13 +197,13 @@ def shift_lanes(src: Rows, dst: Rows, left: bool = True) -> List[Instr]:
 # ---------------------------------------------------------------------------
 
 def reduce_pairwise(val: Rows, scratch: Rows, width: int,
-                    distance: int) -> List[Instr]:
+                    distance: int) -> Program:
     """One tree-reduction step: every lane adds the lane `distance` to its
     right: val[0:width+1] <- val + shift_left^distance(val).
 
     scratch needs `width` rows.  Cost: distance*width + (width+1) cycles.
     """
-    prog: List[Instr] = []
+    prog = Program()
     cur = list(val[:width])
     for d in range(distance):
         prog += shift_lanes(cur, scratch[:width], left=True)
@@ -204,7 +212,7 @@ def reduce_pairwise(val: Rows, scratch: Rows, width: int,
     return prog
 
 
-def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int) -> List[Instr]:
+def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int) -> Program:
     """Reduce 2^steps consecutive lanes into lane 0 of each group.
 
     After step s the live accumulator width grows by one bit.  Lane L of
@@ -212,7 +220,7 @@ def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int) -> List[Instr]
     lanes hold garbage partial sums - exactly the paper's "40 partial sums
     per RAM" pattern when steps=2 over the 4 column-mux phases).
     """
-    prog: List[Instr] = []
+    prog = Program()
     w = width
     for s in range(steps):
         prog += reduce_pairwise(val, scratch, w, 1 << s)
@@ -225,7 +233,7 @@ def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int) -> List[Instr]
 # ---------------------------------------------------------------------------
 
 def ooor_dot(weight_rows: Sequence[Rows], x_values: Sequence[int],
-             x_bits: int, acc: Rows) -> List[Instr]:
+             x_bits: int, acc: Rows) -> Program:
     """acc <- sum_j w_j * x_j with x outside the RAM.
 
     For each j, only the *set* bits b of x_j trigger an add of w_j into the
@@ -234,7 +242,7 @@ def ooor_dot(weight_rows: Sequence[Rows], x_values: Sequence[int],
     (this function) inspects x, which is exactly the OOOR mechanism: the
     outside operand is visible to the FSM, not stored in the array.
     """
-    prog: List[Instr] = []
+    prog = Program()
     prog += zero_rows(acc)
     for j, xj in enumerate(x_values):
         assert 0 <= xj < (1 << x_bits)
@@ -249,7 +257,7 @@ def ooor_dot(weight_rows: Sequence[Rows], x_values: Sequence[int],
 # ---------------------------------------------------------------------------
 
 def search_replace(record_rows: Rows, key: int, n_bits: int,
-                   tmp: Rows) -> List[Instr]:
+                   tmp: Rows) -> Program:
     """Zero out records equal to `key` (DB search benchmark).
 
     xor with key (OOOR, n cycles) -> OR-reduce the xor bits into a "differs"
@@ -269,7 +277,7 @@ def search_replace(record_rows: Rows, key: int, n_bits: int,
     return prog
 
 
-def raid_rebuild(data_rows: Sequence[Rows], parity: Rows, out: Rows) -> List[Instr]:
+def raid_rebuild(data_rows: Sequence[Rows], parity: Rows, out: Rows) -> Program:
     """Reconstruct a lost RAID stripe: out <- XOR of all surviving rows.
 
     Un-transposed layout (Sec. IV-C): each row holds one full operand, so a
@@ -288,7 +296,7 @@ def raid_rebuild(data_rows: Sequence[Rows], parity: Rows, out: Rows) -> List[Ins
 def fp_mul(sa: int, ea: Rows, ma: Rows, sb: int, eb: Rows, mb: Rows,
            sign_a_row: int, sign_b_row: int, sign_out: int,
            e_out: Rows, m_out: Rows, scratch: Rows, e_bits: int,
-           m_bits: int, bias: Optional[int] = None) -> List[Instr]:
+           m_bits: int, bias: Optional[int] = None) -> Program:
     """Floating-point multiply, sign/exponent/mantissa rows per element.
 
     Layout: exponents biased, mantissas without the implicit 1 (IEEE-like,
@@ -301,7 +309,7 @@ def fp_mul(sa: int, ea: Rows, ma: Rows, sb: int, eb: Rows, mb: Rows,
     E, M = e_bits, m_bits
     if bias is None:
         bias = (1 << (E - 1)) - 1
-    prog: List[Instr] = []
+    prog = Program()
     # sign
     prog += logic2([sign_a_row], [sign_b_row], [sign_out], TT_XOR)
     # exponent: e_out = ea + eb - bias, computed in place (carry scratch row)
@@ -332,7 +340,7 @@ def fp_mul(sa: int, ea: Rows, ma: Rows, sb: int, eb: Rows, mb: Rows,
 
 def fp_add_same_sign(ea: Rows, ma: Rows, eb: Rows, mb: Rows,
                      e_out: Rows, m_out: Rows, scratch: Rows,
-                     e_bits: int, m_bits: int) -> List[Instr]:
+                     e_bits: int, m_bits: int) -> Program:
     """Floating-point add for operands of equal sign (magnitude add).
 
     Mixed-sign addition needs a leading-zero-count renormalisation loop the
@@ -345,20 +353,20 @@ def fp_add_same_sign(ea: Rows, ma: Rows, eb: Rows, mb: Rows,
     mantissa add -> 1-step renormalise + exponent increment.
     """
     E, M = e_bits, m_bits
-    prog: List[Instr] = []
-    o = 0
-    def take(k):
-        nonlocal o
-        rows = list(scratch[o:o + k]); o += k
-        return rows
-    d_ab = take(E + 1)      # ea - eb (carry row = a>=b flag)
-    d_ba = take(E + 1)
-    tmp = take(E)
-    e_big = take(E)
-    m_big = take(M + 1)     # with implicit 1
-    m_small = take(M + 1)
-    d_abs = take(E)
-    ssum = take(M + 3)
+    prog = Program()
+    pool = RowAllocator.from_rows(scratch)   # register-file over the scratch
+
+    def take(k, name="t"):
+        return pool.alloc(k, name, contiguous=False)
+
+    d_ab = take(E + 1, "d_ab")      # ea - eb (carry row = a>=b flag)
+    d_ba = take(E + 1, "d_ba")
+    tmp = take(E, "tmp")
+    e_big = take(E, "e_big")
+    m_big = take(M + 1, "m_big")    # with implicit 1
+    m_small = take(M + 1, "m_small")
+    d_abs = take(E, "d_abs")
+    ssum = take(M + 3, "ssum")
 
     prog += sub(ea, eb, d_ab, tmp, store_cout=True)   # carry=1 iff ea>=eb
     prog += sub(eb, ea, d_ba, tmp, store_cout=True)
@@ -406,7 +414,7 @@ def fp_add_same_sign(ea: Rows, ma: Rows, eb: Rows, mb: Rows,
 # (all built from the same ISA - the paper's "versatile blocks" claim)
 # ---------------------------------------------------------------------------
 
-def compare_ge(a: Rows, b: Rows, tmp: Rows, flag_row: int) -> List[Instr]:
+def compare_ge(a: Rows, b: Rows, tmp: Rows, flag_row: int) -> Program:
     """flag <- (a >= b) per lane, via the subtract borrow chain.
 
     2n+3 cycles; leaves the flag in `flag_row` AND in the carry latch
@@ -418,7 +426,7 @@ def compare_ge(a: Rows, b: Rows, tmp: Rows, flag_row: int) -> List[Instr]:
     return prog
 
 
-def select(cond_carry: bool, a: Rows, b: Rows, dst: Rows) -> List[Instr]:
+def select(cond_carry: bool, a: Rows, b: Rows, dst: Rows) -> Program:
     """dst <- carry ? a : b (2n cycles of predicated copies)."""
     prog = copy_rows(a, dst, pred_sel=PRED_CARRY)
     prog += copy_rows(b, dst, pred_sel=PRED_NOT_CARRY)
@@ -426,7 +434,7 @@ def select(cond_carry: bool, a: Rows, b: Rows, dst: Rows) -> List[Instr]:
 
 
 def reduce_max(val: Rows, scratch: Rows, n_bits: int,
-               distance: int) -> List[Instr]:
+               distance: int) -> Program:
     """One max-tree step: each lane takes max(self, lane+distance).
 
     scratch: n_bits (shifted copy) + 2*n_bits+1 (compare temps) rows.
@@ -434,7 +442,7 @@ def reduce_max(val: Rows, scratch: Rows, n_bits: int,
     n = n_bits
     shifted = list(scratch[:n])
     tmp = list(scratch[n:3 * n + 1])
-    prog: List[Instr] = []
+    prog = Program()
     cur = list(val[:n])
     for _ in range(distance):
         prog += shift_lanes(cur, shifted, left=True)
@@ -446,7 +454,7 @@ def reduce_max(val: Rows, scratch: Rows, n_bits: int,
 
 
 def div(a: Rows, b: Rows, quot: Rows, rem: Rows, scratch: Rows
-        ) -> List[Instr]:
+        ) -> Program:
     """Restoring long division: quot, rem <- a // b, a % b (unsigned).
 
     a, b, quot, rem: n rows each; scratch: 2n+1 + n rows.
@@ -454,9 +462,10 @@ def div(a: Rows, b: Rows, quot: Rows, rem: Rows, scratch: Rows
     paper steers division-free algorithms toward CoMeFa blocks.
     """
     n = len(a)
-    diff = list(scratch[:n + 1])
-    tmp = list(scratch[n + 1:2 * n + 1])
-    prog: List[Instr] = zero_rows(rem)
+    pool = RowAllocator.from_rows(scratch)
+    diff = pool.alloc(n + 1, "diff", contiguous=False)
+    tmp = pool.alloc(n, "tmp", contiguous=False)
+    prog = zero_rows(rem)
     for i in reversed(range(n)):
         # rem = (rem << 1) | a_i   (shift within the bit rows of each lane)
         for j in reversed(range(1, n)):
@@ -498,7 +507,7 @@ def booth_digits(x: int, n_bits: int) -> List[int]:
 
 def ooor_dot_booth(weight_rows: Sequence[Rows], x_values: Sequence[int],
                    x_bits: int, acc: Rows, neg_scratch: Rows
-                   ) -> List[Instr]:
+                   ) -> Program:
     """OOOR dot product with Booth-recoded outside operand.
 
     For x values with long runs of ones (e.g. 0b0111110), Booth recoding
@@ -507,7 +516,7 @@ def ooor_dot_booth(weight_rows: Sequence[Rows], x_values: Sequence[int],
     element, then added with a preset carry at the digit offset.
     """
     nw = len(weight_rows[0])
-    prog: List[Instr] = zero_rows(acc)
+    prog = zero_rows(acc)
     for j, xj in enumerate(x_values):
         w = weight_rows[j]
         digits = booth_digits(xj, x_bits)
@@ -532,3 +541,121 @@ def ooor_dot_booth(weight_rows: Sequence[Rows], x_values: Sequence[int],
                     prog += add_ext(rem_rows, [1] * len(rem_rows), rem_rows,
                                     store_cout=False, preset=True)
     return prog
+
+
+# ---------------------------------------------------------------------------
+# ProgramBuilder: allocator-backed assembly of whole kernels
+# ---------------------------------------------------------------------------
+
+class ProgramBuilder:
+    """Assemble CoMeFa programs against allocator-managed row operands.
+
+    Replaces the seed code's hand-threaded `list(range(...))` row
+    bookkeeping: operands come from a `RowAllocator`, every op allocates
+    its own destination, and `build()` returns an `ir.Program` annotated
+    with the live-out rows (everything still allocated - freed scratch is
+    declared dead, which is what arms the dead-write-elimination pass).
+
+        b = ProgramBuilder("madd")
+        x, y = b.input(8, "x"), b.input(8, "y")
+        p = b.mul(x, y)
+        s = b.add(p, p)
+        prog = b.build()          # optimized, live_out = {x, y, p, s}
+
+    Inputs are placed with `layout.place(arr, values, op.base, op.n_bits)`.
+    """
+
+    def __init__(self, name: str = "prog",
+                 alloc: Optional[RowAllocator] = None):
+        self.name = name
+        self.alloc = alloc or RowAllocator()
+        self._prog = Program(name=name)
+        self._live = set()
+        self._retired = set()
+
+    # -- operands ----------------------------------------------------------
+    def input(self, n_bits: int, name: str = "in") -> Operand:
+        """Allocate rows for an operand the caller will place data into."""
+        op = self.alloc.alloc(n_bits, name)
+        self._live.update(op)
+        return op
+
+    def temp(self, n_bits: int, name: str = "tmp") -> Operand:
+        """Allocate scratch rows; call `drop()` when done to mark it dead."""
+        op = self.alloc.alloc(n_bits, name)
+        self._live.update(op)
+        return op
+
+    def drop(self, op: Operand) -> None:
+        """Mark an operand dead at program exit (arms dead-write elim).
+
+        The rows are NOT returned to the allocator: instructions already
+        emitted still write them, so handing them to a later `input()`
+        would let the program clobber caller-placed data mid-run.  They
+        stay retired for the builder's lifetime.
+        """
+        if self._retired & set(op):
+            raise ValueError(f"operand {op!r} already dropped")
+        if not set(op) <= (self._live | self._retired):
+            raise ValueError(f"operand {op!r} not from this builder")
+        self._retired.update(op)
+        self._live.difference_update(op)
+
+    # -- ops (each allocates its destination and emits the schedule) -------
+    def emit(self, prog) -> None:
+        self._prog += prog
+
+    def zero(self, n_bits: int, name: str = "z") -> Operand:
+        dst = self.input(n_bits, name)
+        self._prog += zero_rows(dst)
+        return dst
+
+    def copy(self, src: Rows, pred_sel: int = PRED_ALWAYS,
+             name: str = "cp") -> Operand:
+        dst = self.input(len(src), name)
+        self._prog += copy_rows(src, dst, pred_sel=pred_sel)
+        return dst
+
+    def logic(self, a: Rows, b: Rows, tt: int, name: str = "l") -> Operand:
+        dst = self.input(len(a), name)
+        self._prog += logic2(a, b, dst, tt)
+        return dst
+
+    def add(self, a: Rows, b: Rows, store_cout: bool = True,
+            name: str = "sum") -> Operand:
+        dst = self.input(len(a) + (1 if store_cout else 0), name)
+        self._prog += add(a, b, dst, store_cout=store_cout)
+        return dst
+
+    def sub(self, a: Rows, b: Rows, name: str = "diff") -> Operand:
+        n = len(a)
+        dst = self.input(n + 1, name)
+        tmp = self.temp(n)
+        self._prog += sub(a, b, dst, tmp)
+        self.drop(tmp)
+        return dst
+
+    def mul(self, a: Rows, b: Rows, name: str = "prod") -> Operand:
+        dst = self.input(2 * len(a), name)
+        self._prog += mul(a, b, dst)
+        return dst
+
+    def dot(self, weights: Sequence[Rows], x_values: Sequence[int],
+            x_bits: int, acc_bits: int, name: str = "acc") -> Operand:
+        """OOOR dot product into a fresh accumulator (Sec. III-I)."""
+        acc = self.input(acc_bits, name)
+        self._prog += ooor_dot(weights, list(x_values), x_bits, acc)
+        return acc
+
+    def reduce(self, val: Rows, width: int, steps: int) -> None:
+        """In-place lane-tree reduction (val needs width+steps+1 rows)."""
+        tmp = self.temp(width + steps)
+        self._prog += reduce_tree(val, tmp, width, steps)
+        self.drop(tmp)
+
+    # -- finalise ----------------------------------------------------------
+    def build(self, optimize: bool = True) -> Program:
+        """The assembled program; optimized through the IR pass pipeline."""
+        prog = self._prog.with_live_out(self._live)
+        prog.name = self.name
+        return prog.optimize() if optimize else prog

@@ -5,10 +5,17 @@ These formulas drive the analytical FPGA performance model
 asserted against them in tests - exact equality for the fixed-point ops
 (the paper's n+1 / n^2+3n-2 are exact) and small-tolerance agreement for
 floating point (the paper calls those counts approximate).
+
+Alongside the paper's formulas, `achieved_cycles()` reports the
+*post-optimization* counts: the length of the generated program after the
+IR pass pipeline (constant folding, dead-write elimination, dual-port
+co-issue - see `ir.py`).  Achieved counts are never above the closed-form
+counts; `fpga_model/perf.py` can price benchmarks with either.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 
 def add_cycles(n: int) -> int:
@@ -115,6 +122,101 @@ class Precision:
             return fp_mul_cycles(self.e_bits, self.m_bits) + \
                 fp_add_cycles(self.acc_e, self.acc_m)
         return mac_cycles(self.int_bits, self.acc_bits)
+
+
+# ---------------------------------------------------------------------------
+# achieved (post-optimization) cycle counts
+#
+# Each entry builds the real generated program through `program.py`, runs
+# the IR pass pipeline, and reports its scheduled length.  Imports are
+# deferred so `timing` stays importable from `program` without a cycle.
+# ---------------------------------------------------------------------------
+
+def _alloc():
+    from .ir import RowAllocator
+    return RowAllocator()
+
+
+@functools.lru_cache(maxsize=None)
+def achieved_cycles(op: str, *args: int) -> int:
+    """Post-optimization cycle count of the generated program for `op`.
+
+    Supported ops (args):
+      add(n) | sub(n) | mul(n) | mac(n, acc_bits) | zero(n) | search(n)
+      reduction(n_bits, steps) | fp_mul(e, m) | fp_add(e, m)
+      ooor_dot(k, w_bits, x_bits, acc_bits)   [average-density operand]
+    """
+    from . import program
+    a = _alloc()
+    if op == "add":
+        (n,) = args
+        p = program.add(a.alloc(n), a.alloc(n), a.alloc(n + 1))
+    elif op == "sub":
+        (n,) = args
+        p = program.sub(a.alloc(n), a.alloc(n), a.alloc(n + 1), a.alloc(n))
+    elif op == "mul":
+        (n,) = args
+        p = program.mul(a.alloc(n), a.alloc(n), a.alloc(2 * n))
+    elif op == "mac":
+        n, acc_bits = args
+        x, y, acc = a.alloc(n), a.alloc(n), a.alloc(acc_bits)
+        prod = a.alloc(2 * n)
+        p = program.mul(x, y, prod) + program.add_into(acc, prod, 0)
+    elif op == "zero":
+        (n,) = args
+        p = program.zero_rows(a.alloc(n))
+    elif op == "search":
+        (n,) = args
+        p = program.search_replace(a.alloc(n), 0b0101010101010101 &
+                                   ((1 << n) - 1), n, a.alloc(n))
+    elif op == "reduction":
+        n_bits, steps = args
+        val = a.alloc(n_bits + steps + 1)
+        scratch = a.alloc(n_bits + steps)
+        p = program.reduce_tree(val, scratch, n_bits, steps)
+    elif op == "fp_mul":
+        e, m = args
+        sa, sb, so = a.alloc(1), a.alloc(1), a.alloc(1)
+        p = program.fp_mul(0, a.alloc(e), a.alloc(m), 0, a.alloc(e),
+                           a.alloc(m), sa[0], sb[0], so[0], a.alloc(e),
+                           a.alloc(m), a.alloc(e + 3 + 2 * m + 2 * (m + 1)),
+                           e, m)
+    elif op == "fp_add":
+        e, m = args
+        scr = a.alloc(2 * (e + 1) + e + e + 2 * (m + 1) + e + (m + 3))
+        p = program.fp_add_same_sign(a.alloc(e), a.alloc(m), a.alloc(e),
+                                     a.alloc(m), a.alloc(e), a.alloc(m),
+                                     scr, e, m)
+    elif op == "ooor_dot":
+        k, w_bits, x_bits, acc_bits = args
+        # deterministic average-density operand: alternating bit pattern
+        # has exactly x_bits/2 set bits (the paper's ~2x zero-skip claim)
+        x = [0b0101010101010101 & ((1 << x_bits) - 1)] * k
+        w = [a.alloc(w_bits) for _ in range(k)]
+        p = program.ooor_dot(w, x, x_bits, a.alloc(acc_bits))
+    else:
+        raise ValueError(f"unknown op {op!r}")
+    return p.optimize().cycles
+
+
+def achieved_mac_cycles(n: int, acc_bits: int) -> int:
+    return achieved_cycles("mac", n, acc_bits)
+
+
+def achieved_fp_mul_cycles(e: int, m: int) -> int:
+    return achieved_cycles("fp_mul", e, m)
+
+
+def achieved_fp_add_cycles(e: int, m: int) -> int:
+    return achieved_cycles("fp_add", e, m)
+
+
+def achieved_search_cycles(n: int) -> int:
+    return achieved_cycles("search", n)
+
+
+def achieved_reduction_cycles(n_bits: int, steps: int = 2) -> int:
+    return achieved_cycles("reduction", n_bits, steps)
 
 
 # the paper's evaluated precisions (Sec. V-A)

@@ -1,2 +1,3 @@
-"""Pallas TPU kernels: bit-plane/bit-serial compute (CoMeFa on the MXU/VPU)."""
-from . import ops, ref
+"""Pallas TPU kernels: bit-plane/bit-serial compute (CoMeFa on the MXU/VPU),
+plus the simulator-backed validation kernels (`comefa_sim`)."""
+from . import comefa_sim, ops, ref

@@ -1,0 +1,99 @@
+"""Simulator-backed CoMeFa kernels, driven by the program IR.
+
+The Pallas kernels in this package model CoMeFa's bit-serial math on the
+MXU/VPU; this module runs the *same* workloads through the bit-level
+`ComefaArray` instead, using `ProgramBuilder`-assembled, IR-optimized
+programs.  It is the validation backend that ties the kernel layer to the
+hardware model, and the showcase for the encode cache: shape-dependent
+programs (elementwise mul) are built and encoded once, then every batch
+reuses the cached engine matrix.
+
+Sizes are bounded by one block's register file (126 usable rows), so this
+backend targets correctness checks and benchmarking, not throughput.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from ..core.comefa import ComefaArray, N_COLS, layout, program
+from ..core.comefa.ir import Program
+
+# shape-keyed cache of built + optimized programs (the expensive part is
+# Python-side generation; the engine-matrix encode cache in `block.py`
+# additionally skips re-encoding when equal programs are rebuilt)
+_PROGRAMS: Dict[Tuple, Tuple[Program, tuple]] = {}
+
+
+def _eltwise_mul_program(bits: int) -> Tuple[Program, tuple]:
+    key = ("eltwise_mul", bits)
+    if key not in _PROGRAMS:
+        b = program.ProgramBuilder(f"eltwise_mul{bits}")
+        x = b.input(bits, "x")
+        y = b.input(bits, "y")
+        prod = b.mul(x, y)
+        _PROGRAMS[key] = (b.build(), (x, y, prod))
+    return _PROGRAMS[key]
+
+
+def comefa_eltwise_mul(a: np.ndarray, b: np.ndarray, *, bits: int,
+                       optimized: bool = True) -> np.ndarray:
+    """Unsigned elementwise multiply on the bit-level simulator.
+
+    Tiles the flat inputs across blocks x 160 lanes, runs one cached
+    co-issued program per array (all blocks execute it SIMD), and returns
+    the 2*bits-bit products.
+    """
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    assert a.shape == b.shape
+    prog, (rx, ry, rout) = _eltwise_mul_program(bits)
+    if not optimized:
+        key = ("eltwise_mul_raw", bits)
+        if key not in _PROGRAMS:
+            raw = program.mul(rx, ry, rout)
+            _PROGRAMS[key] = (raw, (rx, ry, rout))
+        prog = _PROGRAMS[key][0]
+    n = a.shape[0]
+    lanes = N_COLS
+    n_blocks = max(1, -(-n // lanes))
+    pad = n_blocks * lanes - n
+    a2 = np.pad(a, (0, pad)).reshape(n_blocks, lanes)
+    b2 = np.pad(b, (0, pad)).reshape(n_blocks, lanes)
+    arr = ComefaArray(n_blocks=n_blocks)
+    layout.place(arr, a2, rx.base, bits)
+    layout.place(arr, b2, ry.base, bits)
+    arr.run(prog)
+    out = layout.extract(arr, rout.base, 2 * bits)
+    return out.reshape(-1)[:n]
+
+
+def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
+                x_bits: int, acc_bits: int = 32) -> np.ndarray:
+    """y = w.T @ x with resident weights and a streamed vector (OOOR).
+
+    w: [k, n] unsigned ints; x: [k] unsigned ints.  One OOOR dot-product
+    program computes all n outputs across lanes/blocks; the program depends
+    on x (the FSM inspects the outside operand - Sec. III-I), so it is
+    rebuilt per x but still IR-optimized (zero-skip + co-issued clears).
+    """
+    w = np.asarray(w)
+    x = np.asarray(x).ravel()
+    k, n = w.shape
+    assert x.shape[0] == k
+    assert k * w_bits + acc_bits <= 126, "operands exceed one block's rows"
+    bld = program.ProgramBuilder(f"gemv_k{k}")
+    w_ops = [bld.input(w_bits, f"w{j}") for j in range(k)]
+    acc = bld.dot(w_ops, [int(v) for v in x], x_bits, acc_bits)
+    prog = bld.build()
+    lanes = N_COLS
+    n_blocks = max(1, -(-n // lanes))
+    pad = n_blocks * lanes - n
+    arr = ComefaArray(n_blocks=n_blocks)
+    for j in range(k):
+        wj = np.pad(w[j], (0, pad)).reshape(n_blocks, lanes)
+        layout.place(arr, wj, w_ops[j].base, w_bits)
+    arr.run(prog)
+    out = layout.extract(arr, acc.base, acc_bits)
+    return out.reshape(-1)[:n]

@@ -1,5 +1,8 @@
 """Per-architecture smoke tests: reduced config, one forward + train step
 + decode step on CPU, asserting output shapes and finiteness."""
+import pytest
+
+pytestmark = pytest.mark.slow  # minutes-long end-to-end tier (see pytest.ini)
 import dataclasses
 
 import jax

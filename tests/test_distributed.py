@@ -5,6 +5,9 @@ These run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=
 executes sharded train/serve/pipeline steps on a real 8-device mesh and
 asserts numerics against the single-device reference.
 """
+import pytest
+
+pytestmark = pytest.mark.slow  # minutes-long end-to-end tier (see pytest.ini)
 import os
 import subprocess
 import sys

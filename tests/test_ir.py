@@ -1,0 +1,395 @@
+"""Program-IR tests: pass-pipeline semantics preservation (optimized
+programs produce bit-identical state), co-issue cycle-count wins, the row
+allocator, the encode cache, and batched execution."""
+import numpy as np
+import pytest
+
+from repro.core.comefa import (ComefaArray, N_COLS, ROW_ONES, ROW_ZEROS,
+                               block, ir, isa, layout, program, timing)
+from repro.core.comefa.ir import Program, RowAllocator
+
+RNG = np.random.default_rng(0)
+
+
+def rand_u(bits, n=N_COLS, rng=RNG):
+    return rng.integers(0, 1 << bits, size=n, dtype=np.int64)
+
+
+def run_state(prog, placements, n_blocks=1, chain=False):
+    """Run `prog` after placing operands; return (cycles, mem, carry, mask)."""
+    arr = ComefaArray(n_blocks=n_blocks, chain=chain)
+    for vals, base, bits in placements:
+        layout.place(arr, vals, base, bits)
+    cyc = arr.run(prog)
+    return cyc, arr.mem.copy(), arr.carry.copy(), arr.mask.copy()
+
+
+def assert_equivalent(prog, placements, n_blocks=1):
+    """Optimized program ⊨ same full machine state as the unoptimized one."""
+    c0, m0, cr0, mk0 = run_state(prog, placements, n_blocks)
+    opt = prog.optimize() if isinstance(prog, Program) else ir.optimize(prog)
+    c1, m1, cr1, mk1 = run_state(opt, placements, n_blocks)
+    np.testing.assert_array_equal(m0, m1)
+    np.testing.assert_array_equal(cr0, cr1)
+    np.testing.assert_array_equal(mk0, mk1)
+    assert c1 <= c0
+    return c0, c1
+
+
+# ---------------------------------------------------------------------------
+# property-style round trip: optimized == unoptimized on random operands
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n", [4, 8])
+def test_roundtrip_mul(seed, n):
+    rng = np.random.default_rng(seed)
+    a, b = rand_u(n, rng=rng), rand_u(n, rng=rng)
+    prog = program.mul(list(range(n)), list(range(n, 2 * n)),
+                       list(range(2 * n, 4 * n)))
+    c0, c1 = assert_equivalent(prog, [(a, 0, n), (b, n, n)])
+    assert c1 < c0                      # co-issue must actually fire
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_roundtrip_add_sub(seed):
+    rng = np.random.default_rng(seed)
+    n = 8
+    a, b = rand_u(n, rng=rng), rand_u(n, rng=rng)
+    prog = program.add(list(range(n)), list(range(n, 2 * n)),
+                       list(range(2 * n, 3 * n + 1)))
+    prog += program.sub(list(range(n)), list(range(n, 2 * n)),
+                        list(range(3 * n + 1, 4 * n + 2)),
+                        list(range(4 * n + 2, 5 * n + 2)))
+    assert_equivalent(prog, [(a, 0, n), (b, n, n)])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_roundtrip_ooor_dot(seed):
+    rng = np.random.default_rng(seed)
+    k, wb, xb, accb = 3, 5, 6, 18
+    placements = []
+    w_rows = []
+    for j in range(k):
+        rows = list(range(j * wb, (j + 1) * wb))
+        placements.append((rand_u(wb, rng=rng), rows[0], wb))
+        w_rows.append(rows)
+    x = [int(v) for v in rng.integers(0, 1 << xb, size=k)]
+    acc = list(range(k * wb, k * wb + accb))
+    prog = program.ooor_dot(w_rows, x, xb, acc)
+    assert_equivalent(prog, placements)
+
+
+def test_roundtrip_search_and_select():
+    n = 16
+    recs = rand_u(n)
+    key = int(recs[5])
+    prog = program.search_replace(list(range(n)), key, n,
+                                  list(range(n, 2 * n)))
+    c0, c1 = assert_equivalent(prog, [(recs, 0, n)])
+    assert c1 < c0                      # co-issued record clears
+
+
+def test_roundtrip_div():
+    rng = np.random.default_rng(11)
+    n = 6
+    a = rand_u(n, rng=rng)
+    b = np.maximum(rand_u(n, rng=rng), 1)
+    prog = program.div(list(range(n)), list(range(n, 2 * n)),
+                       list(range(2 * n, 3 * n)), list(range(3 * n, 4 * n)),
+                       list(range(4 * n, 6 * n + 2)))
+    c0, c1 = assert_equivalent(prog, [(a, 0, n), (b, n, n)])
+    assert c1 < c0                      # co-issued quotient-bit selects
+
+
+def test_roundtrip_booth_dot():
+    rng = np.random.default_rng(13)
+    k, wb, xb, accb = 3, 5, 6, 22
+    placements = []
+    w_rows = []
+    for j in range(k):
+        rows = list(range(j * wb, (j + 1) * wb))
+        placements.append((rand_u(wb, rng=rng), rows[0], wb))
+        w_rows.append(rows)
+    x = [int(v) for v in rng.integers(0, 1 << xb, size=k)]
+    acc = list(range(k * wb, k * wb + accb))
+    neg = list(range(k * wb + accb, k * wb + accb + wb))
+    prog = program.ooor_dot_booth(w_rows, x, xb, acc, neg)
+    assert_equivalent(prog, placements)
+
+
+@pytest.mark.parametrize("e,m", [(4, 3), (5, 10)])
+def test_roundtrip_fp_mul(e, m):
+    rng = np.random.default_rng(7)
+    E, M = e, m
+    bias = (1 << (E - 1)) - 1
+    ea = np.clip(rng.integers(1, (1 << E) - 1, N_COLS), bias - 2, bias + 2)
+    eb = np.clip(rng.integers(1, (1 << E) - 1, N_COLS), bias - 2, bias + 2)
+    ma = rand_u(M, rng=rng)
+    mb = rand_u(M, rng=rng)
+    sa = rand_u(1, rng=rng)
+    sb = rand_u(1, rng=rng)
+    r = 0
+
+    def rows(k):
+        nonlocal r
+        out = list(range(r, r + k))
+        r += k
+        return out
+
+    ra_s, ra_e, ra_m = rows(1), rows(E), rows(M)
+    rb_s, rb_e, rb_m = rows(1), rows(E), rows(M)
+    ro_s, ro_e, ro_m = rows(1), rows(E), rows(M)
+    scratch = rows(E + 3 + 2 * M + 2 * (M + 1))
+    prog = program.fp_mul(0, ra_e, ra_m, 0, rb_e, rb_m, ra_s[0], rb_s[0],
+                          ro_s[0], ro_e, ro_m, scratch, E, M)
+    placements = [(sa, ra_s[0], 1), (ea, ra_e[0], E), (ma, ra_m[0], M),
+                  (sb, rb_s[0], 1), (eb, rb_e[0], E), (mb, rb_m[0], M)]
+    c0, c1 = assert_equivalent(prog, placements)
+    assert c1 < c0
+
+
+# ---------------------------------------------------------------------------
+# co-issued cycle counts vs the paper's closed forms
+# ---------------------------------------------------------------------------
+
+def test_achieved_at_most_closed_form():
+    assert timing.achieved_cycles("add", 8) <= timing.add_cycles(8)
+    assert timing.achieved_cycles("sub", 8) <= timing.sub_cycles(8)
+    for n in (2, 4, 8, 12):
+        assert timing.achieved_cycles("mul", n) <= timing.mul_cycles(n)
+    assert timing.achieved_mac_cycles(8, 27) <= timing.mac_cycles(8, 27)
+    assert timing.achieved_fp_mul_cycles(4, 3) <= timing.fp_mul_cycles(4, 3)
+    assert timing.achieved_fp_add_cycles(4, 3) <= timing.fp_add_cycles(4, 3)
+    assert timing.achieved_search_cycles(16) <= timing.search_cycles(16)
+    assert (timing.achieved_reduction_cycles(8)
+            <= timing.reduction_cycles(8))
+
+
+def test_coissue_strictly_wins_on_copy_heavy_programs():
+    # zero fills pack two rows per cycle via the W2_ZERO write driver
+    assert timing.achieved_cycles("zero", 16) == 8
+    # the multiplier saves its partial-product clears + carry/mask overlaps
+    assert timing.achieved_cycles("mul", 8) <= timing.mul_cycles(8) - 10
+    assert timing.achieved_search_cycles(16) <= timing.search_cycles(16) - 4
+
+
+# ---------------------------------------------------------------------------
+# individual passes
+# ---------------------------------------------------------------------------
+
+def test_constant_fold_copy_from_ones_is_read_free():
+    prog = program.copy_rows([ROW_ONES], [5])
+    (slot,) = prog.optimize(passes=(ir.fold_constant_rows,)).slots
+    eff = ir.instr_effects(slot[0])
+    assert not eff.reads
+    assert slot[0].truth_table == isa.TT_ONE
+
+
+def test_constant_fold_drops_redundant_rezero():
+    prog = program.zero_rows([5]) + program.zero_rows([5])
+    out = prog.optimize(passes=(ir.fold_constant_rows,))
+    assert out.cycles == 1
+
+
+def test_constant_fold_port_b_read_of_const_row():
+    # AND with the all-ones row becomes an ext-bit broadcast (Port B freed)
+    prog = program.logic2([3], [ROW_ONES], [9], isa.TT_AND)
+    (slot,) = prog.optimize(passes=(ir.fold_constant_rows,)).slots
+    assert slot[0].b_ext == 1 and slot[0].ext_bit == 1
+    a = rand_u(1)
+    assert_equivalent(prog, [(a, 3, 1)])
+
+
+def test_dead_write_elimination_requires_live_out():
+    prog = program.zero_rows([10, 11])
+    assert prog.optimize(passes=(ir.eliminate_dead_writes,)).cycles == 2
+    annotated = prog.with_live_out([10])
+    out = annotated.optimize(passes=(ir.eliminate_dead_writes,))
+    assert out.cycles == 1              # write to dead row 11 removed
+
+
+def test_dead_write_elimination_keeps_read_then_overwritten_rows():
+    # row 6 is written, read (into row 7), then overwritten: first write live
+    prog = program.copy_rows([3], [6])
+    prog += program.copy_rows([6], [7])
+    prog += program.copy_rows([4], [6])
+    out = prog.with_live_out([6, 7]).optimize(
+        passes=(ir.eliminate_dead_writes,))
+    assert out.cycles == 3
+
+
+def test_coissue_preserves_write_order_on_same_row():
+    # select pattern: pred-CARRY copy then pred-NOT_CARRY clear of one row
+    n = 4
+    a, b = rand_u(n), rand_u(n)
+    prog = program.compare_ge(list(range(n)), list(range(n, 2 * n)),
+                              list(range(2 * n, 4 * n)), 4 * n)
+    prog += program.copy_rows([ROW_ONES], [4 * n + 1],
+                              pred_sel=isa.PRED_CARRY)
+    prog += Program([program._w1(dst_row=4 * n + 1, truth_table=isa.TT_ZERO,
+                                 c_rst=1, pred_sel=isa.PRED_NOT_CARRY)])
+    assert_equivalent(prog, [(a, 0, n), (b, n, n)])
+
+
+# ---------------------------------------------------------------------------
+# Program container + encode cache + batched execution
+# ---------------------------------------------------------------------------
+
+def test_program_is_list_like():
+    p = program.zero_rows([1, 2])
+    q = program.zero_rows([3])
+    both = p + q
+    assert isinstance(both, Program)
+    assert len(both) == 3 and both.n_instrs == 3
+    p += q
+    assert len(p) == 3
+    assert all(isinstance(i, isa.Instr) for i in p)
+
+
+def test_encode_cache_hits_on_structurally_equal_programs():
+    block._ENCODE_CACHE.clear()
+    block.ENCODE_CACHE_STATS.update(hits=0, misses=0)
+    arr = ComefaArray()
+    n = 6
+
+    def fresh():
+        return program.add(list(range(n)), list(range(n, 2 * n)),
+                           list(range(2 * n, 3 * n + 1)))
+
+    arr.run(fresh())
+    assert block.ENCODE_CACHE_STATS == {"hits": 0, "misses": 1}
+    arr.run(fresh())                    # rebuilt but structurally equal
+    assert block.ENCODE_CACHE_STATS["hits"] == 1
+    # an add has no fusible pairs, so its optimized form is structurally
+    # identical and re-hits the same entry
+    arr.run(fresh().optimize())
+    assert block.ENCODE_CACHE_STATS["hits"] == 2
+    # a co-issued mul has a different slot structure: fresh entry
+    mul = program.mul(list(range(n)), list(range(n, 2 * n)),
+                      list(range(2 * n, 4 * n))).optimize()
+    arr.run(mul)
+    assert block.ENCODE_CACHE_STATS["misses"] == 2
+    arr.run(mul)
+    assert block.ENCODE_CACHE_STATS["hits"] == 3
+
+
+def test_run_programs_single_dispatch_equals_sequential():
+    n = 4
+    a, b = rand_u(n), rand_u(n)
+    progs = [program.add(list(range(n)), list(range(n, 2 * n)),
+                         list(range(2 * n, 3 * n + 1))),
+             program.mul(list(range(n)), list(range(n, 2 * n)),
+                         list(range(3 * n + 1, 5 * n + 1))).optimize()]
+    arr1 = ComefaArray()
+    layout.place(arr1, a, 0, n)
+    layout.place(arr1, b, n, n)
+    for p in progs:
+        arr1.run(p)
+    arr2 = ComefaArray()
+    layout.place(arr2, a, 0, n)
+    layout.place(arr2, b, n, n)
+    cycles = arr2.run_programs(progs)
+    assert cycles == [len(p) for p in progs]
+    np.testing.assert_array_equal(arr1.mem, arr2.mem)
+    assert arr1.cycles == arr2.cycles
+
+
+def test_legacy_list_and_matrix_inputs_still_run():
+    n = 4
+    a, b = rand_u(n), rand_u(n)
+    prog = program.add(list(range(n)), list(range(n, 2 * n)),
+                       list(range(2 * n, 3 * n + 1)))
+    as_list = list(prog)
+    as_matrix = isa.encode_program(as_list)
+    outs = []
+    for form in (prog, as_list, as_matrix):
+        arr = ComefaArray()
+        layout.place(arr, a, 0, n)
+        layout.place(arr, b, n, n)
+        arr.run(form)
+        outs.append(layout.extract(arr, 2 * n, n + 1, block=0))
+    np.testing.assert_array_equal(outs[0], a + b)
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+# ---------------------------------------------------------------------------
+# RowAllocator / ProgramBuilder
+# ---------------------------------------------------------------------------
+
+def test_allocator_contiguous_and_reserved():
+    a = RowAllocator()
+    op = a.alloc(8, "x")
+    assert list(op) == list(range(op.base, op.base + 8))
+    assert ROW_ONES not in op and ROW_ZEROS not in op
+    with pytest.raises(ValueError):
+        a.free([ROW_ONES])
+
+
+def test_allocator_free_and_reuse():
+    a = RowAllocator()
+    op1 = a.alloc(100)
+    with pytest.raises(MemoryError):
+        a.alloc(100)
+    a.free(op1)
+    with pytest.raises(ValueError):
+        a.free(op1)                     # double free
+    a.alloc(100)
+
+
+def test_allocator_scratch_context():
+    a = RowAllocator()
+    before = a.n_free
+    with a.scratch(10) as s:
+        assert len(s) == 10
+        assert a.n_free == before - 10
+    assert a.n_free == before
+
+
+def test_builder_program_correct_and_optimized():
+    n = 6
+    rng = np.random.default_rng(3)
+    a, b = rand_u(n, rng=rng), rand_u(n, rng=rng)
+    bld = program.ProgramBuilder("mac")
+    ra = bld.input(n, "a")
+    rb = bld.input(n, "b")
+    prod = bld.mul(ra, rb)
+    ssum = bld.add(prod[:n], ra)
+    prog = bld.build()
+    assert prog.cycles < bld.build(optimize=False).cycles
+    arr = ComefaArray()
+    layout.place(arr, a, ra.base, n)
+    layout.place(arr, b, rb.base, n)
+    arr.run(prog)
+    np.testing.assert_array_equal(
+        layout.extract(arr, prod.base, 2 * n, block=0), a * b)
+    np.testing.assert_array_equal(
+        layout.extract(arr, ssum.base, n + 1, block=0), (a * b) % (1 << n) + a)
+
+
+def test_builder_dead_scratch_is_eliminated():
+    bld = program.ProgramBuilder("dwe")
+    x = bld.input(4, "x")
+    t = bld.temp(4)
+    bld.emit(program.copy_rows(x, t))   # write scratch, never read
+    bld.drop(t)
+    assert bld.build().cycles == 0      # the dead copies disappear
+
+
+# ---------------------------------------------------------------------------
+# simulator-backed kernels (kernels layer consuming the IR API)
+# ---------------------------------------------------------------------------
+
+def test_kernels_comefa_sim_eltwise_and_gemv():
+    from repro.kernels import comefa_sim
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 256, size=333)
+    b = rng.integers(0, 256, size=333)
+    np.testing.assert_array_equal(
+        comefa_sim.comefa_eltwise_mul(a, b, bits=8), a * b)
+    w = rng.integers(0, 32, size=(6, 200))
+    x = rng.integers(0, 32, size=6)
+    np.testing.assert_array_equal(
+        comefa_sim.comefa_gemv(w, x, w_bits=5, x_bits=5, acc_bits=20),
+        (w * x[:, None]).sum(0))

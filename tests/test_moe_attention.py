@@ -1,4 +1,7 @@
 """Deeper unit tests: MoE routing invariants + chunked attention vs dense."""
+import pytest
+
+pytestmark = pytest.mark.slow  # minutes-long end-to-end tier (see pytest.ini)
 import dataclasses
 
 import jax

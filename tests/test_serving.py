@@ -1,5 +1,8 @@
 """Serving-engine tests: enc-dec generation, temperature sampling,
 quantized-weight serving, prefill last-only equivalence."""
+import pytest
+
+pytestmark = pytest.mark.slow  # minutes-long end-to-end tier (see pytest.ini)
 import dataclasses
 
 import jax

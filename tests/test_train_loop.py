@@ -1,5 +1,8 @@
 """End-to-end training loop tests: loss decreases, checkpoint/restart
 resumes exactly, straggler watchdog fires, serving generates."""
+import pytest
+
+pytestmark = pytest.mark.slow  # minutes-long end-to-end tier (see pytest.ini)
 import dataclasses
 
 import jax
