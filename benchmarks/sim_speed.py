@@ -95,3 +95,36 @@ def run(rows: list) -> None:
     rows.append(("sim/mul8_hw_us_comefa_d", 0.0, hw_us, None))
     rows.append(("sim/mul8_hw_us_comefa_d_coissue", 0.0,
                  timing.achieved_cycles("mul", n) / 588e6 * 1e6, None))
+
+    # chained vs single-block reduction: cycles to one scalar over ALL
+    # lanes of nb chained blocks (Sec. III-F block hops dominate the tail)
+    red_bits = 8
+    for nb in (1, 2, 4):
+        cyc = timing.chained_reduction_cycles(red_bits, n_blocks=nb)
+        ach = timing.achieved_chained_reduction_cycles(red_bits, nb)
+        rows.append((f"sim/chain_reduce_nb{nb}_cycles", 0.0, cyc, None))
+        rows.append((f"sim/chain_reduce_nb{nb}_cycles_coissue",
+                     0.0, ach, None))
+    # wall-clock of the chained 2-block scalar reduction on the simulator
+    nb2, rb = 2, 4
+    steps, chain_steps = program.full_reduce_steps(nb2)
+    total = steps + chain_steps
+    red_arr = ComefaArray(n_blocks=nb2, chain=True)
+    vals = rng.integers(0, 1 << rb, size=nb2 * 160)
+    layout.plan_chain(nb2 * 160).place(red_arr, vals, 0, rb)
+    val = list(range(rb + total))
+    scratch = list(range(rb + total, 2 * (rb + total) - 1))
+    red_prog = program.reduce_to_scalar(val, scratch, rb,
+                                        n_blocks=nb2).optimize()
+    us_red = _bench(lambda: red_arr.run(red_prog), reps=3)
+    rows.append(("sim/chain_reduce_nb2_us", us_red, us_red, None))
+
+    # FIR steady-state per-sample cycles (taps resident across the chain,
+    # samples streamed OOOR) vs the generic-MAC closed form
+    rows.append(("sim/fir_per_sample_cycles_coissue", 0.0,
+                 timing.achieved_fir_cycles_per_sample(16, 16, 36), None))
+    rows.append(("sim/fir_per_sample_cycles_closed_form", 0.0,
+                 timing.fir_cycles(1, 16, 36, include_init=False,
+                                   x_values=[0b0101010101010101]), None))
+    rows.append(("sim/fir_per_sample_cycles_generic_mac", 0.0,
+                 timing.mac_cycles(16, 36) / 2, None))

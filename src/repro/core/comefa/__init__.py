@@ -3,11 +3,13 @@ timing."""
 from . import ir, isa, layout, program, timing
 from .block import ComefaArray, ROW_ONES, ROW_ZEROS
 from .ir import Operand, Program, RowAllocator
-from .isa import Instr, N_COLS, N_ROWS, WORD_BITS
+from .isa import Instr, N_COLS, N_ROWS, USABLE_ROWS, WORD_BITS
+from .layout import ChainPlan, plan_chain
 from .program import ProgramBuilder
 
 __all__ = [
     "ir", "isa", "layout", "program", "timing", "ComefaArray", "Instr",
-    "Program", "ProgramBuilder", "RowAllocator", "Operand",
-    "N_COLS", "N_ROWS", "WORD_BITS", "ROW_ONES", "ROW_ZEROS",
+    "Program", "ProgramBuilder", "RowAllocator", "Operand", "ChainPlan",
+    "plan_chain", "N_COLS", "N_ROWS", "USABLE_ROWS", "WORD_BITS",
+    "ROW_ONES", "ROW_ZEROS",
 ]

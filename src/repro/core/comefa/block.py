@@ -54,6 +54,10 @@ from .isa import (COL_MUX, N_COLS, N_ROWS, ROW_ONES, ROW_ZEROS, WORD_BITS,
 # field indices in the encoded program matrix
 _F = {name: i for i, name in enumerate(isa.ENGINE_FIELD_NAMES)}
 
+# encoded one-cycle latch reset, inserted at `run_programs` boundaries
+_LATCH_CLEAR_MAT = np.array([isa.latch_clear().engine_vector()],
+                            dtype=np.int32)
+
 
 def _step(chain: bool, state, fields):
     """One CoMeFa cycle. state = (mem[nb,R,C], carry[nb,C], mask[nb,C])."""
@@ -160,6 +164,10 @@ def _encode_cached(key, producer) -> np.ndarray:
         return mat
     ENCODE_CACHE_STATS["misses"] += 1
     mat = producer()
+    # Freeze before caching: the matrix is shared with every later caller,
+    # so an in-place edit by one would silently corrupt all future runs of
+    # the same program.  Mutation now raises instead.
+    mat.setflags(write=False)
     if len(_ENCODE_CACHE) >= _ENCODE_CACHE_MAX:
         _ENCODE_CACHE.pop(next(iter(_ENCODE_CACHE)))   # FIFO eviction
     _ENCODE_CACHE[key] = mat
@@ -237,6 +245,9 @@ class ComefaArray:
         self.io_words += 1
 
     def read_word(self, block: int, addr: int) -> int:
+        # mirror write_word's checks: an out-of-range read would otherwise
+        # index garbage rows instead of failing loudly
+        assert 0 <= addr < N_ROWS * COL_MUX and addr != isa.INSTR_ADDR
         row, cols = addr >> 2, self._word_cols(addr)
         bits = self.mem[block, row, cols].astype(np.int64)
         self.io_words += 1
@@ -264,18 +275,34 @@ class ComefaArray:
         """
         return self._dispatch(encoded(program))
 
-    def run_programs(self, programs) -> List[int]:
+    def run_programs(self, programs, reset_latches: bool = True) -> List[int]:
         """Execute several programs back-to-back in ONE scan dispatch.
 
         The encoded matrices are concatenated so `lax.scan` traces and
         dispatches once for the whole batch (one trace per total shape,
         not one per program).  Returns per-program cycle counts.
+
+        Carry/mask latch state survives a program's last cycle by design,
+        so naive concatenation leaks program i's latches into program i+1
+        - silently wrong for any program that predicates on a latch before
+        setting it.  With `reset_latches` (the default) a one-cycle
+        `isa.latch_clear` instruction is inserted at every boundary and
+        charged to the following program's cycle count; pass False only
+        when the programs deliberately thread latch state (then the batch
+        is cycle-for-cycle identical to sequential `run()` calls).
         """
         mats = [encoded(p) for p in programs]
         if not mats:
             return []
-        self._dispatch(np.concatenate(mats, axis=0))
-        return [int(m.shape[0]) for m in mats]
+        if reset_latches and len(mats) > 1:
+            parts, counts = [mats[0]], [int(mats[0].shape[0])]
+            for m in mats[1:]:
+                parts += [_LATCH_CLEAR_MAT, m]
+                counts.append(int(m.shape[0]) + 1)
+        else:
+            parts, counts = mats, [int(m.shape[0]) for m in mats]
+        self._dispatch(np.concatenate(parts, axis=0))
+        return counts
 
     def _dispatch(self, mat: np.ndarray) -> int:
         if mat.shape[0] == 0:

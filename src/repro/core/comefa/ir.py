@@ -37,8 +37,8 @@ import numpy as np
 
 from . import isa
 from .isa import (Instr, N_ROWS, PRED_ALWAYS, PRED_CARRY, PRED_MASK,
-                  PRED_NOT_CARRY, ROW_ONES, ROW_ZEROS, TT_ONE, TT_ZERO,
-                  W1_RIGHT, W1_S, W2_CARRY, W2_ZERO)
+                  PRED_NOT_CARRY, RESERVED_ROWS, ROW_ONES, ROW_ZEROS,
+                  TT_ONE, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY, W2_ZERO)
 
 Slot = Tuple[Instr, ...]          # 1 instr, or 2 fused into one cycle
 
@@ -160,7 +160,7 @@ class RowAllocator:
     """
 
     def __init__(self, n_rows: int = N_ROWS,
-                 reserved: Sequence[int] = (ROW_ZEROS, ROW_ONES)):
+                 reserved: Sequence[int] = RESERVED_ROWS):
         self.n_rows = n_rows
         self._free = sorted(set(range(n_rows)) - set(reserved))
         self._reserved = tuple(reserved)
@@ -357,19 +357,58 @@ class Program:
         Default pipeline: constant-row folding -> dead-write elimination
         (needs a live-out annotation to do anything) -> dual-port co-issue.
         """
-        if passes is None:
-            passes = DEFAULT_PASSES
         lo = frozenset(live_out) if live_out is not None else self.live_out
         if self.is_fused:
-            # already scheduled: the passes operate on unfused slots, and
-            # re-running them cannot improve the schedule - idempotent no-op
+            # already scheduled: the default pipeline operates on unfused
+            # slots and re-running it cannot improve the schedule, so the
+            # default request is an idempotent no-op.  Explicitly requested
+            # passes cannot be honoured on fused slots - fail loudly rather
+            # than silently skipping them.
+            if passes is not None:
+                raise ValueError(
+                    "cannot run explicit passes on an already-fused "
+                    "program; optimize before co-issue scheduling")
             return Program.from_slots(list(self._slots), name=self.name,
                                       live_out=lo)
+        if passes is None:
+            passes = DEFAULT_PASSES
         slots: List[Slot] = [tuple(s) for s in self._slots]
         for p in passes:
             slots = p(slots, live_out=lo)
         return Program.from_slots(slots, name=self.name + "+opt",
                                   live_out=lo)
+
+
+def concat_programs(programs: Sequence, name: str = "batch",
+                    reset_latches: bool = True) -> Program:
+    """Concatenate programs into one, isolating latch state at boundaries.
+
+    Carry/mask latch values survive a program's last cycle by design (an
+    add's final carry store depends on it), so naive concatenation leaks
+    program i's latches into program i+1 - silently wrong for any program
+    that predicates on a latch before setting it.  With `reset_latches`
+    (the default) a one-cycle `isa.latch_clear` slot is inserted at every
+    boundary.  `ComefaArray.run_programs` applies the same boundary
+    treatment at the encoded-matrix level (keeping the per-program encode
+    caches warm); this IR-level form is for composing multi-phase programs
+    that are optimized or inspected as one object.
+    """
+    out = Program(name=name)
+    live = set()
+    annotated = True
+    for idx, p in enumerate(programs):
+        if reset_latches and idx:
+            out.append(isa.latch_clear())
+        out.extend(p)
+        if isinstance(p, Program) and p.live_out is not None:
+            live |= p.live_out
+        else:
+            annotated = False
+    if annotated and live:
+        # the union keeps dead-write elimination armed on the batch; any
+        # unannotated constituent forces the conservative "all rows live"
+        out.live_out = frozenset(live)
+    return out
 
 
 def _slot_vector(slot: Slot) -> List[int]:

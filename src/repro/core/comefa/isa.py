@@ -52,6 +52,16 @@ INSTR_ADDR = 0x1FF    # reserved logical address for instructions
 # by program generators and the IR constant-folding pass (`ir.py`).
 ROW_ONES = N_ROWS - 1   # row 127: all ones
 ROW_ZEROS = N_ROWS - 2  # row 126: all zeros
+RESERVED_ROWS = (ROW_ZEROS, ROW_ONES)
+# Rows available to operands: everything except the reserved constant rows.
+# Row-budget checks (RowAllocator, the sim-backed kernels) derive from this
+# rather than hardcoding the number.
+USABLE_ROWS = N_ROWS - len(RESERVED_ROWS)
+
+
+def ceil_log2(x: int) -> int:
+    """Smallest k with 2^k >= x (0 for x <= 1); sizes reduction trees."""
+    return max(0, int(x - 1).bit_length())
 
 # truth tables (TR output indexed by (A<<1)|B)
 TT_ZERO = 0b0000
@@ -186,6 +196,18 @@ class Instr:
         if self.wp2_en and self.w2_sel == W2_CARRY and self.c_rst:
             v[_W2_SEL_IDX] = W2_ZERO
         return v + [self.dst_row, self.pred_sel]
+
+
+def latch_clear() -> Instr:
+    """Instruction that resets both PE latches in one cycle, no row writes.
+
+    Reads the all-zeros row on both ports with TT_ZERO: the mask latch
+    loads TR = 0 (`m_en`), and the carry latch loads CGEN(0, 0, 0) = 0
+    (`c_en` with `c_rst` gating the carry input).  Used at `run_programs`
+    batch boundaries so latch state cannot leak between programs.
+    """
+    return Instr(src1_row=ROW_ZEROS, src2_row=ROW_ZEROS,
+                 truth_table=TT_ZERO, c_en=1, c_rst=1, m_en=1)
 
 
 def encode_program(instrs: Sequence[Instr]) -> np.ndarray:

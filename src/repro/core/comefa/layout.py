@@ -11,6 +11,8 @@ cost of loading/unloading is `timing.load_store_cycles`.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from .isa import COL_MUX, N_COLS, N_ROWS, WORD_BITS
@@ -114,3 +116,97 @@ def lane_of(element_index: int) -> int:
     """Lane occupied by element j after `load_transposed`."""
     c, j = divmod(element_index, WORD_BITS)
     return COL_MUX * j + c
+
+
+# ---------------------------------------------------------------------------
+# Block-aware placement planner for chained operands (Sec. III-F, Fig 6b)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """Placement of ONE logical operand across `n_blocks * 160` lanes.
+
+    Shift chaining treats the blocks of an array as one flat
+    ``n_blocks * N_COLS``-lane row (global lane = block * 160 + column),
+    so a chained program only sees elements in the intended order when
+    the placement maps logical index j to the right *global* lane:
+
+      * ``order="linear"``: element j -> global lane j.  Adjacent
+        elements occupy adjacent lanes across block seams - required by
+        anything that shifts data between neighbours (chained reductions,
+        the FIR delay line).
+      * ``order="port"``: the phase-correct hybrid-port mapping of
+        `load_transposed` - within each block, element e lands in lane
+        ``COL_MUX * (e % 40) + e // 40`` (bit-slice words interleave the
+        4 column-mux phases, Fig 7).  Matches what real port loads
+        produce; lane-order-insensitive programs (element-wise ops,
+        order-free accumulations) can use it and skip re-shuffling.
+
+    `place`/`extract` hide the mapping either way, so kernels address
+    operands purely by logical element index.
+    """
+    n_elems: int
+    n_blocks: int
+    order: str = "linear"
+
+    def __post_init__(self):
+        assert self.order in ("linear", "port"), self.order
+        assert self.n_elems <= self.n_blocks * N_COLS, \
+            (f"{self.n_elems} elements exceed {self.n_blocks} blocks x "
+             f"{N_COLS} lanes")
+
+    @property
+    def total_lanes(self) -> int:
+        return self.n_blocks * N_COLS
+
+    def lanes(self) -> np.ndarray:
+        """[n_elems] global lane of each logical element."""
+        j = np.arange(self.n_elems)
+        blk, e = j // N_COLS, j % N_COLS
+        if self.order == "port":
+            lane = COL_MUX * (e % WORD_BITS) + e // WORD_BITS
+        else:
+            lane = e
+        return blk * N_COLS + lane
+
+    def place(self, arr, values: np.ndarray, base_row: int, n_bits: int):
+        """Store values[j] transposed at the lane the plan assigns to j."""
+        values = np.asarray(values).ravel()
+        assert values.shape[0] == self.n_elems
+        g = self.lanes()
+        for b in range(self.n_blocks):
+            sel = (g // N_COLS) == b
+            if sel.any():
+                place(arr, values[sel], base_row, n_bits,
+                      lanes=g[sel] % N_COLS, block=b)
+
+    def extract(self, arr, base_row: int, n_bits: int,
+                signed: bool = False) -> np.ndarray:
+        """Read the operand back in logical element order ([n_elems])."""
+        g = self.lanes()
+        out = np.empty(self.n_elems, dtype=np.int64)
+        for b in range(self.n_blocks):
+            sel = (g // N_COLS) == b
+            if sel.any():
+                out[sel] = extract(arr, base_row, n_bits,
+                                   lanes=g[sel] % N_COLS, block=b,
+                                   signed=signed)
+        return out
+
+
+def plan_chain(n_elems: int, order: str = "linear",
+               max_blocks: int = 0) -> ChainPlan:
+    """Spread `n_elems` elements across the fewest whole blocks.
+
+    Returns a `ChainPlan` with ``ceil(n_elems / 160)`` blocks; the caller
+    builds a matching ``ComefaArray(n_blocks, chain=True)`` when the plan
+    spans more than one block.  `max_blocks` (0 = unlimited) bounds the
+    spread and raises when the operand cannot fit.
+    """
+    assert n_elems >= 1
+    n_blocks = -(-n_elems // N_COLS)
+    if max_blocks and n_blocks > max_blocks:
+        raise ValueError(
+            f"{n_elems} elements need {n_blocks} blocks "
+            f"({N_COLS} lanes each), limit is {max_blocks}")
+    return ChainPlan(n_elems=n_elems, n_blocks=n_blocks, order=order)

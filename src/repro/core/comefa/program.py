@@ -19,10 +19,10 @@ from typing import List, Optional, Sequence
 
 from . import ir
 from .ir import Operand, Program, RowAllocator
-from .isa import (Instr, PRED_ALWAYS, PRED_CARRY, PRED_MASK, PRED_NOT_CARRY,
-                  ROW_ONES, TT_AND, TT_COPY_A, TT_COPY_B, TT_NOT_A, TT_ONE,
-                  TT_OR, TT_XNOR, TT_XOR, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY,
-                  W2_LEFT)
+from .isa import (Instr, N_COLS, PRED_ALWAYS, PRED_CARRY, PRED_MASK,
+                  PRED_NOT_CARRY, ROW_ONES, TT_AND, TT_COPY_A, TT_COPY_B,
+                  TT_NOT_A, TT_ONE, TT_OR, TT_XNOR, TT_XOR, TT_ZERO,
+                  W1_RIGHT, W1_S, W2_CARRY, W2_LEFT, ceil_log2, latch_clear)
 
 Rows = Sequence[int]
 
@@ -62,6 +62,11 @@ def logic_ext(src1: Rows, dst: Rows, tt: int, ext_bits: Sequence[int],
     return Program(_w1(src1_row=a, dst_row=d, truth_table=tt, c_rst=1,
                        b_ext=1, ext_bit=e, pred_sel=pred_sel)
                    for a, d, e in zip(src1, dst, ext_bits))
+
+
+def clear_latches() -> Program:
+    """Reset the carry and mask latches (one cycle, no row writes)."""
+    return Program([latch_clear()])
 
 
 def preset_carry() -> Program:
@@ -212,19 +217,105 @@ def reduce_pairwise(val: Rows, scratch: Rows, width: int,
     return prog
 
 
-def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int) -> Program:
-    """Reduce 2^steps consecutive lanes into lane 0 of each group.
+def reduce_tree(val: Rows, scratch: Rows, width: int, steps: int,
+                chain_steps: int = 0) -> Program:
+    """Reduce 2^(steps+chain_steps) consecutive lanes into each group head.
 
     After step s the live accumulator width grows by one bit.  Lane L of
     each group of 2^steps lanes ends with the group sum in lane 0 (other
     lanes hold garbage partial sums - exactly the paper's "40 partial sums
     per RAM" pattern when steps=2 over the 4 column-mux phases).
+
+    `chain_steps` continues the distance-doubling past the in-block lane
+    span: those steps' shift distances meet or exceed the 160-lane block
+    width, so the partial sums hop across block boundaries through the
+    corner-PE threading of adjacent RAMs (`W1_RIGHT` left shifts crossing
+    the chain seam, Sec. III-F / Fig 6b).  Running a program with
+    chain_steps > 0 - or any step whose groups straddle a block edge -
+    requires an array built with ``chain=True``; on an unchained array the
+    seam shifts in zeros and the cross-block partials are lost.
+
+    val needs width + steps + chain_steps rows; scratch one fewer.
     """
     prog = Program()
     w = width
-    for s in range(steps):
+    for s in range(steps + chain_steps):
         prog += reduce_pairwise(val, scratch, w, 1 << s)
         w += 1
+    return prog
+
+
+def full_reduce_steps(n_blocks: int = 1, lanes: int = N_COLS):
+    """(steps, chain_steps) reducing every lane of `n_blocks` blocks.
+
+    Together they cover ceil(log2(lanes * n_blocks)) doubling steps: the
+    first `steps` stay inside one block's lane span, the remaining
+    `chain_steps` have distances >= the block width and hop partial sums
+    across the RAM-to-RAM chain.  n_blocks=1 is the degenerate chain
+    (chain_steps == 0).
+    """
+    total = ceil_log2(lanes * n_blocks)
+    in_block = min(total, ceil_log2(lanes))
+    return in_block, total - in_block
+
+
+def reduce_to_scalar(val: Rows, scratch: Rows, width: int,
+                     n_blocks: int = 1, lanes: int = N_COLS) -> Program:
+    """Reduce ALL lanes of ALL chained blocks into lane 0 of block 0.
+
+    The flat chained row is `n_blocks * lanes` wide; ceil(log2) doubling
+    steps leave the grand total in the leftmost lane (edge shifts feed
+    zeros, so lanes past the last block contribute nothing).  val needs
+    width + ceil(log2(n_blocks * lanes)) rows, scratch one fewer.
+    Requires chain=True whenever n_blocks > 1.
+    """
+    steps, chain_steps = full_reduce_steps(n_blocks, lanes)
+    return reduce_tree(val, scratch, width, steps, chain_steps=chain_steps)
+
+
+# ---------------------------------------------------------------------------
+# FIR filter (Sec. IV-C): resident taps, streamed samples, chained shifts
+# ---------------------------------------------------------------------------
+
+def fir_sample(taps: Rows, acc: Rows, x_t: int, x_bits: int,
+               shift: bool = True) -> Program:
+    """One transposed-FIR sample step: accumulate, then shift partials.
+
+    Every lane holds one resident tap (lane j of the chained row = h_j)
+    and a partial sum.  The streamed sample x_t is an outside operand the
+    FSM inspects (OOOR, Sec. III-I): each *set* bit b of x_t triggers one
+    add of the tap rows into the accumulator at offset b - zero bits cost
+    nothing.  The trailing chained left shift moves every partial one lane
+    toward lane 0 (crossing block seams via the corner PEs), implementing
+    the transposed-form delay line: s_j(t) = h_j * x(t) + s_{j+1}(t-1).
+    """
+    assert 0 <= x_t < (1 << x_bits)
+    prog = Program()
+    for b in range(x_bits):
+        if (x_t >> b) & 1:
+            prog += add_into(acc, taps, b)
+    if shift:
+        prog += shift_lanes(acc, acc, left=True)
+    return prog
+
+
+def fir(taps: Rows, acc: Rows, x_values: Sequence[int],
+        x_bits: int) -> Program:
+    """Transposed-form FIR: y(t) = sum_j h_j * x(t - j) (Sec. IV-C).
+
+    Taps stay resident one-per-lane across `n_blocks * 160` chained lanes;
+    samples stream through the instruction generator (OOOR).  After the
+    accumulate phase of sample t, lane 0 of block 0 holds y(t); the shift
+    phase then drains it and advances the delay line.  A filter wider than
+    one block's 160 lanes only works on a chain=True array - exactly the
+    paper's FIR benchmark configuration (Sec. III-F / IV-C).
+
+    acc needs >= x_bits + tap_bits rows (tap_bits + x_bits + log2(n_taps)
+    to be overflow-safe for the full filter).
+    """
+    prog = zero_rows(acc)
+    for x_t in x_values:
+        prog += fir_sample(taps, acc, int(x_t), x_bits)
     return prog
 
 
@@ -647,11 +738,38 @@ class ProgramBuilder:
         self._prog += ooor_dot(weights, list(x_values), x_bits, acc)
         return acc
 
-    def reduce(self, val: Rows, width: int, steps: int) -> None:
-        """In-place lane-tree reduction (val needs width+steps+1 rows)."""
-        tmp = self.temp(width + steps)
-        self._prog += reduce_tree(val, tmp, width, steps)
+    def reduce(self, val: Rows, width: int, steps: int,
+               chain_steps: int = 0) -> None:
+        """In-place lane-tree reduction.
+
+        val needs width + steps + chain_steps rows; chain_steps extra
+        block-hopping steps require a chain=True array.
+        """
+        total = steps + chain_steps
+        assert len(val) >= width + total, \
+            f"val needs {width + total} rows, has {len(val)}"
+        tmp = self.temp(max(1, width + total - 1))
+        self._prog += reduce_tree(val, tmp, width, steps,
+                                  chain_steps=chain_steps)
         self.drop(tmp)
+
+    def reduce_all(self, val: Rows, width: int, n_blocks: int = 1) -> None:
+        """Reduce every lane of every chained block into lane 0 of block 0.
+
+        val needs width + ceil(log2(n_blocks * 160)) rows; the shifts of
+        the chain-hop steps require the array to be built with chain=True
+        when n_blocks > 1.
+        """
+        steps, chain_steps = full_reduce_steps(n_blocks)
+        self.reduce(val, width, steps, chain_steps=chain_steps)
+
+    def fir(self, taps: Rows, x_values: Sequence[int], x_bits: int,
+            acc_bits: int, name: str = "acc") -> Operand:
+        """Transposed FIR into a fresh accumulator (resident taps, streamed
+        samples); y(t) appears in lane 0 after each sample's accumulate."""
+        acc = self.input(acc_bits, name)
+        self._prog += fir(taps, acc, list(x_values), x_bits)
+        return acc
 
     # -- finalise ----------------------------------------------------------
     def build(self, optimize: bool = True) -> Program:

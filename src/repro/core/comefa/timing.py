@@ -91,6 +91,49 @@ def reduction_cycles(n_bits: int, lanes: int = 160, steps: int = 2,
     return total
 
 
+def chained_reduction_cycles(n_bits: int, lanes: int = 160,
+                             n_blocks: int = 1) -> int:
+    """Full reduction of ALL lanes of a chained array to one scalar.
+
+    ceil(log2(lanes * n_blocks)) doubling steps: the in-block steps plus
+    the chain steps whose shift distances hop partial sums across block
+    boundaries through the corner PEs (Sec. III-F).  Step s costs
+    2^s * w_s shift cycles + (w_s + 1) add cycles with w_s = n_bits + s.
+    Matches `program.reduce_to_scalar` exactly (n_blocks=1 included - the
+    degenerate chain).
+    """
+    from .isa import ceil_log2
+    # same per-step cost model as the partial-sum tree, run to scalar depth
+    return reduction_cycles(n_bits, lanes=lanes,
+                            steps=ceil_log2(lanes * n_blocks))
+
+
+def fir_cycles(n_samples: int, x_bits: int, acc_bits: int,
+               x_values=None, include_init: bool = True) -> int:
+    """Transposed-form FIR over chained blocks (Sec. IV-C).
+
+    Per sample: one accumulator-segment add per *set* bit b of the sample
+    (OOOR zero-bit skipping; an add at offset b ripples acc_bits - b
+    cycles) plus an acc_bits-cycle chained left shift of the partial sums.
+    Exact (matches `program.fir`) when the sample stream `x_values` is
+    given; otherwise the paper's average-density estimate (x_bits/2 set
+    bits at mean offset (x_bits-1)/2).  `include_init` adds the one-off
+    accumulator zeroing.
+    """
+    if x_values is not None:
+        assert n_samples == len(x_values), (
+            f"n_samples={n_samples} inconsistent with "
+            f"{len(x_values)} x_values")
+        adds = sum(acc_bits - b
+                   for x_t in x_values for b in range(x_bits)
+                   if (int(x_t) >> b) & 1)
+    else:
+        adds = int(round(n_samples * (x_bits / 2)
+                         * (acc_bits - (x_bits - 1) / 2)))
+    total = adds + n_samples * acc_bits
+    return total + (acc_bits if include_init else 0)
+
+
 def search_cycles(n_bits: int) -> int:
     """DB search+replace: xor (n) + OR-reduce (n-1) + mask (1) + clear (n)."""
     return 3 * n_bits
@@ -145,6 +188,8 @@ def achieved_cycles(op: str, *args: int) -> int:
       add(n) | sub(n) | mul(n) | mac(n, acc_bits) | zero(n) | search(n)
       reduction(n_bits, steps) | fp_mul(e, m) | fp_add(e, m)
       ooor_dot(k, w_bits, x_bits, acc_bits)   [average-density operand]
+      chained_reduction(n_bits, n_blocks)     [all-lane scalar reduction]
+      fir(n_samples, tap_bits, x_bits, acc_bits) [average-density samples]
     """
     from . import program
     a = _alloc()
@@ -187,11 +232,29 @@ def achieved_cycles(op: str, *args: int) -> int:
         p = program.fp_add_same_sign(a.alloc(e), a.alloc(m), a.alloc(e),
                                      a.alloc(m), a.alloc(e), a.alloc(m),
                                      scr, e, m)
+    elif op == "chained_reduction":
+        n_bits, n_blocks = args
+        steps, chain_steps = program.full_reduce_steps(n_blocks)
+        total = steps + chain_steps
+        val = a.alloc(n_bits + total)
+        scratch = a.alloc(n_bits + total - 1)
+        p = program.reduce_to_scalar(val, scratch, n_bits,
+                                     n_blocks=n_blocks)
+    elif op == "fir":
+        n_samples, tap_bits, x_bits, acc_bits = args
+        # deterministic average-density sample stream: alternating bits
+        # give exactly ceil(x_bits/2) set bits at any sample width
+        pattern = sum(1 << b for b in range(0, x_bits, 2))
+        x = [pattern] * n_samples
+        taps = a.alloc(tap_bits)
+        acc = a.alloc(acc_bits)
+        p = program.fir(taps, acc, x, x_bits)
     elif op == "ooor_dot":
         k, w_bits, x_bits, acc_bits = args
         # deterministic average-density operand: alternating bit pattern
-        # has exactly x_bits/2 set bits (the paper's ~2x zero-skip claim)
-        x = [0b0101010101010101 & ((1 << x_bits) - 1)] * k
+        # has exactly ceil(x_bits/2) set bits (the paper's ~2x zero-skip
+        # claim), at any operand width
+        x = [sum(1 << b for b in range(0, x_bits, 2))] * k
         w = [a.alloc(w_bits) for _ in range(k)]
         p = program.ooor_dot(w, x, x_bits, a.alloc(acc_bits))
     else:
@@ -217,6 +280,27 @@ def achieved_search_cycles(n: int) -> int:
 
 def achieved_reduction_cycles(n_bits: int, steps: int = 2) -> int:
     return achieved_cycles("reduction", n_bits, steps)
+
+
+def achieved_chained_reduction_cycles(n_bits: int, n_blocks: int = 1) -> int:
+    return achieved_cycles("chained_reduction", n_bits, n_blocks)
+
+
+def achieved_fir_cycles(n_samples: int, tap_bits: int, x_bits: int,
+                        acc_bits: int) -> int:
+    return achieved_cycles("fir", n_samples, tap_bits, x_bits, acc_bits)
+
+
+def achieved_fir_cycles_per_sample(tap_bits: int, x_bits: int,
+                                   acc_bits: int) -> int:
+    """Steady-state per-sample cycles of the scheduled FIR program.
+
+    Differencing two program lengths removes the one-off accumulator
+    initialisation, leaving the accumulate + chained-shift cost one
+    streamed sample adds to the optimized schedule.
+    """
+    return (achieved_fir_cycles(2, tap_bits, x_bits, acc_bits)
+            - achieved_fir_cycles(1, tap_bits, x_bits, acc_bits))
 
 
 # the paper's evaluated precisions (Sec. V-A)

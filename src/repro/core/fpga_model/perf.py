@@ -113,6 +113,14 @@ def fir(variant: str, taps: int = 128, n_samples: int = 1 << 20,
     (Sec. V-B) - the bound is the streaming input distribution network, so
     -D and -A achieve the same speedup.  CCB cannot run this benchmark
     (no RAM-to-RAM chaining) -> speedup 1.0.
+
+    With `achieved=True` the CoMeFa side is priced from the real
+    scheduled multi-block program (`program.fir` through the IR pass
+    pipeline): taps resident one per lane across ``ceil(taps / 160)``
+    chained blocks, each streamed sample completing one MAC in *every*
+    tap lane for the steady-state per-sample cycle count
+    (`timing.achieved_fir_cycles_per_sample`).  The closed-form default
+    keeps the paper's generic-MAC estimate (validated against Fig 9).
     """
     macs = taps * n_samples
     base_rate = dsp_mac_throughput("int16") + lb_mac_throughput("int16")
@@ -122,9 +130,16 @@ def fir(variant: str, taps: int = 128, n_samples: int = 1 << 20,
     # design-frequency-limited: the CoMeFa array adds lanes at f_design,
     # bounded by the LCU pipeline's streaming rate
     f_design = 215e6
-    cyc = (timing.achieved_mac_cycles(16, 36) if achieved
-           else timing.mac_cycles(16, 36)) / 2     # OOOR streaming samples
-    ram_rate = R.BRAMS * v.lanes * f_design / cyc
+    if achieved:
+        # int16 taps/samples, 36-bit accumulator (the INT16 precision of
+        # Table II); each chained group of n_blocks RAMs retires `taps`
+        # MACs per streamed sample
+        n_blocks = -(-taps // v.lanes)
+        per_sample = timing.achieved_fir_cycles_per_sample(16, 16, 36)
+        ram_rate = (R.BRAMS / n_blocks) * taps * f_design / per_sample
+    else:
+        cyc = timing.mac_cycles(16, 36) / 2        # OOOR streaming samples
+        ram_rate = R.BRAMS * v.lanes * f_design / cyc
     # LCU pipeline: load/compute/unload overlap leaves the compute fraction
     lcu_overlap = 0.70
     ram_rate *= lcu_overlap

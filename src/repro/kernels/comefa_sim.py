@@ -8,22 +8,35 @@ hardware model, and the showcase for the encode cache: shape-dependent
 programs (elementwise mul) are built and encoded once, then every batch
 reuses the cached engine matrix.
 
-Sizes are bounded by one block's register file (126 usable rows), so this
-backend targets correctness checks and benchmarking, not throughput.
+Row budgets are bounded by one block's register file (`isa.USABLE_ROWS`:
+the 128 wordlines minus the reserved all-zeros/all-ones constant rows),
+so this backend targets correctness checks and benchmarking, not
+throughput.  *Lane* budgets are not bounded: `comefa_dot` and
+`comefa_fir` spread one logical operand across ``n_blocks * 160`` lanes
+of a chain=True array (Sec. III-F shift chaining) and reduce across the
+whole chain.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from ..core.comefa import ComefaArray, N_COLS, layout, program
-from ..core.comefa.ir import Program
+from ..core.comefa.ir import Program, RowAllocator
+from ..core.comefa.isa import USABLE_ROWS, ceil_log2
 
 # shape-keyed cache of built + optimized programs (the expensive part is
 # Python-side generation; the engine-matrix encode cache in `block.py`
 # additionally skips re-encoding when equal programs are rebuilt)
 _PROGRAMS: Dict[Tuple, Tuple[Program, tuple]] = {}
+
+# FIR per-sample programs are keyed by the sample *value* (the schedule
+# depends on exactly its set bits), so up to 2^x_bits entries can exist -
+# bounded with FIFO eviction, mirroring block.py's encode cache
+_FIR_CACHE: Dict[Tuple, Program] = {}
+_FIR_CACHE_MAX = 1024
+_LANE0 = np.array([0])
 
 
 def _eltwise_mul_program(bits: int) -> Tuple[Program, tuple]:
@@ -82,7 +95,11 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     x = np.asarray(x).ravel()
     k, n = w.shape
     assert x.shape[0] == k
-    assert k * w_bits + acc_bits <= 126, "operands exceed one block's rows"
+    demand = k * w_bits + acc_bits
+    assert demand <= USABLE_ROWS, (
+        f"operands need {demand} rows ({k} weights x {w_bits} bits + "
+        f"{acc_bits} accumulator bits), only {USABLE_ROWS} usable rows "
+        f"per block (N_ROWS minus reserved constant rows)")
     bld = program.ProgramBuilder(f"gemv_k{k}")
     w_ops = [bld.input(w_bits, f"w{j}") for j in range(k)]
     acc = bld.dot(w_ops, [int(v) for v in x], x_bits, acc_bits)
@@ -97,3 +114,111 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     arr.run(prog)
     out = layout.extract(arr, acc.base, acc_bits)
     return out.reshape(-1)[:n]
+
+
+def comefa_dot(a: np.ndarray, b: np.ndarray, *, bits: int,
+               optimized: bool = True) -> int:
+    """Full dot product <a, b> reduced to ONE scalar across all blocks.
+
+    Where `comefa_gemv` stops at per-lane partial sums, this kernel
+    places the two vectors one element per lane across
+    ``ceil(n / 160)`` chained blocks (`layout.plan_chain`), multiplies
+    lane-wise, then runs the chained tree reduction
+    (`program.reduce_to_scalar`): doubling-distance shift+add steps whose
+    final hops cross block boundaries through the corner PEs
+    (Sec. III-F).  The scalar lands in lane 0 of block 0.
+
+    The unoptimized reduction segment costs exactly
+    `timing.chained_reduction_cycles(2 * bits, n_blocks=...)` cycles.
+    """
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    assert a.shape == b.shape
+    n = a.shape[0]
+    plan = layout.plan_chain(n)
+    nb = plan.n_blocks
+    steps, chain_steps = program.full_reduce_steps(nb)
+    acc_bits = 2 * bits + steps + chain_steps
+    demand = 2 * bits + acc_bits + (acc_bits - 1)   # x, y, acc, scratch
+    assert demand <= USABLE_ROWS, (
+        f"operands need {demand} rows (2 x {bits}-bit inputs + "
+        f"{acc_bits}-bit accumulator + reduction scratch), only "
+        f"{USABLE_ROWS} usable rows per block")
+    key = ("dot", bits, nb, optimized)
+    if key not in _PROGRAMS:
+        bld = program.ProgramBuilder(f"dot{bits}_nb{nb}")
+        rx = bld.input(bits, "x")
+        ry = bld.input(bits, "y")
+        acc = bld.input(acc_bits, "acc")
+        bld.emit(program.mul(rx, ry, acc[:2 * bits]))
+        bld.emit(program.zero_rows(acc[2 * bits:]))
+        bld.reduce_all(acc, 2 * bits, n_blocks=nb)
+        _PROGRAMS[key] = (bld.build(optimize=optimized), (rx, ry, acc))
+    prog, (rx, ry, acc) = _PROGRAMS[key]
+    arr = ComefaArray(n_blocks=nb, chain=True)
+    plan.place(arr, a, rx.base, bits)
+    plan.place(arr, b, ry.base, bits)
+    arr.run(prog)
+    return int(layout.extract(arr, acc.base, acc_bits, block=0)[0])
+
+
+def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
+               x_bits: int, acc_bits: Optional[int] = None,
+               optimized: bool = True) -> np.ndarray:
+    """y[t] = sum_j taps[j] * x[t-j]: resident taps, streamed samples.
+
+    The paper's FIR benchmark (Sec. IV-C): taps live transposed one per
+    lane across ``ceil(n_taps / 160)`` chained blocks, samples stream
+    through the instruction generator (OOOR).  Each sample costs one
+    accumulator add per *set* sample bit plus a chained left shift of the
+    partial sums - the transposed-form delay line, with partials hopping
+    block seams through the corner PEs.  y[t] drains from lane 0 of
+    block 0 after each sample's accumulate phase.
+
+    With ``optimized=False`` the total simulator cycles equal
+    `timing.fir_cycles(len(x), x_bits, acc_bits, x_values=x)` exactly.
+    """
+    taps = np.asarray(taps).ravel()
+    x = np.asarray(x).ravel()
+    n_taps = taps.shape[0]
+    plan = layout.plan_chain(n_taps)
+    nb = plan.n_blocks
+    if acc_bits is None:
+        acc_bits = tap_bits + x_bits + ceil_log2(max(2, n_taps))
+    demand = tap_bits + acc_bits
+    assert demand <= USABLE_ROWS, (
+        f"taps + accumulator need {demand} rows, only {USABLE_ROWS} "
+        f"usable rows per block")
+    alloc = RowAllocator()
+    tap_rows = alloc.alloc(tap_bits, "taps")
+    acc = alloc.alloc(acc_bits, "acc")
+    arr = ComefaArray(n_blocks=nb, chain=True)
+    plan.place(arr, taps, tap_rows.base, tap_bits)
+
+    # per-phase programs are cached: repeated samples skip both
+    # Python-side generation and the IR pass pipeline
+    def cached(key_tail, build):
+        key = (tap_bits, x_bits, acc_bits, optimized) + key_tail
+        prog = _FIR_CACHE.get(key)
+        if prog is None:
+            prog = build()
+            if optimized:
+                prog = prog.optimize()
+            if len(_FIR_CACHE) >= _FIR_CACHE_MAX:
+                _FIR_CACHE.pop(next(iter(_FIR_CACHE)))   # FIFO eviction
+            _FIR_CACHE[key] = prog
+        return prog
+
+    arr.run(cached(("init",), lambda: program.zero_rows(acc)))
+    shift = cached(("shift",),
+                   lambda: program.shift_lanes(acc, acc, left=True))
+    y = np.empty(x.shape[0], dtype=np.int64)
+    for t, x_t in enumerate(x):
+        arr.run(cached((int(x_t),),
+                       lambda: program.fir_sample(tap_rows, acc, int(x_t),
+                                                  x_bits, shift=False)))
+        # y[t] sits in lane 0 of block 0 between accumulate and shift
+        y[t] = layout.extract(arr, acc.base, acc_bits, lanes=_LANE0,
+                              block=0)[0]
+        arr.run(shift)
+    return y

@@ -418,6 +418,18 @@ def test_hybrid_word_rw_roundtrip():
         assert arr.read_word(0, addr) == w
 
 
+def test_read_word_rejects_bad_addresses_like_write_word():
+    """Regression: out-of-range reads indexed garbage rows instead of
+    failing loudly; read_word now mirrors write_word's checks."""
+    arr = fresh()
+    for bad in (-1, isa.N_ROWS * isa.COL_MUX, isa.INSTR_ADDR):
+        with pytest.raises(AssertionError):
+            arr.read_word(0, bad)
+        with pytest.raises(AssertionError):
+            arr.write_word(0, bad, 1)
+    assert arr.io_words == 0                   # nothing counted on failure
+
+
 def test_memory_mode_preserved_after_compute():
     """Hybrid mode: rows not touched by the program keep stored data."""
     arr = fresh()

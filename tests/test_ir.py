@@ -289,10 +289,70 @@ def test_run_programs_single_dispatch_equals_sequential():
     arr2 = ComefaArray()
     layout.place(arr2, a, 0, n)
     layout.place(arr2, b, n, n)
-    cycles = arr2.run_programs(progs)
+    # reset_latches=False: cycle-for-cycle identical to sequential run()
+    # calls (which deliberately thread latch state across programs)
+    cycles = arr2.run_programs(progs, reset_latches=False)
     assert cycles == [len(p) for p in progs]
     np.testing.assert_array_equal(arr1.mem, arr2.mem)
     assert arr1.cycles == arr2.cycles
+
+
+def test_run_programs_resets_latches_at_boundaries():
+    """Regression: carry/mask latch state leaked from program i into
+    program i+1 when batched - program B below predicates its write on
+    the carry latch *before setting it*, so it must see carry=0, not
+    program A's carry-out."""
+    prog_a = program.preset_carry()            # leaves carry latch = 1
+    prog_b = program.store_carry(5)            # writes latched carry to row 5
+    leaky = ComefaArray()
+    leaky.run_programs([prog_a, prog_b], reset_latches=False)
+    assert layout.extract(leaky, 5, 1, block=0).all()    # the leak
+    clean = ComefaArray()
+    counts = clean.run_programs([prog_a, prog_b])        # default: reset on
+    assert not layout.extract(clean, 5, 1, block=0).any()
+    # the boundary clear cycle is charged to the following program
+    assert counts == [len(prog_a), len(prog_b) + 1]
+    assert clean.cycles == leaky.cycles + 1
+
+
+def test_concat_programs_inserts_boundary_latch_clears():
+    joined = ir.concat_programs([program.preset_carry(),
+                                 program.store_carry(5)])
+    arr = ComefaArray()
+    arr.run(joined)
+    assert not layout.extract(arr, 5, 1, block=0).any()
+    assert joined.cycles == 3                  # 1 + clear + 1
+    unsafe = ir.concat_programs([program.preset_carry(),
+                                 program.store_carry(5)],
+                                reset_latches=False)
+    arr2 = ComefaArray()
+    arr2.run(unsafe)
+    assert layout.extract(arr2, 5, 1, block=0).all()
+
+
+def test_encode_cache_matrices_are_frozen():
+    """Regression: `encoded()` handed out the cached matrix writable - a
+    caller mutating it silently corrupted every later run of the same
+    program.  Mutation must now raise, and the cached entry stay intact."""
+    block._ENCODE_CACHE.clear()
+    n = 4
+    prog = program.add(list(range(n)), list(range(n, 2 * n)),
+                       list(range(2 * n, 3 * n + 1)))
+    mat = block.encoded(prog)
+    with pytest.raises(ValueError):
+        mat[0, 0] = 99
+    # same for raw instruction-list programs
+    raw = block.encoded(list(prog))
+    with pytest.raises(ValueError):
+        raw[:] = 0
+    # and the later cache hit still executes the uncorrupted program
+    a, b = rand_u(n), rand_u(n)
+    arr = ComefaArray()
+    layout.place(arr, a, 0, n)
+    layout.place(arr, b, n, n)
+    arr.run(prog)
+    np.testing.assert_array_equal(
+        layout.extract(arr, 2 * n, n + 1, block=0), a + b)
 
 
 def test_legacy_list_and_matrix_inputs_still_run():

@@ -4,7 +4,7 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis not installed "
                     "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import example, given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,30 @@ def test_shift_left_then_right_loses_only_edges(seed):
     got = layout.extract(arr, 2 * n, n, block=0)
     np.testing.assert_array_equal(got[1:-1], a[1:-1])
     assert got[0] == 0                       # edge lane zero-filled
+
+
+@given(width=st.integers(2, 3), n_blocks=st.sampled_from([1, 2]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+@example(width=2, n_blocks=1, seed=0)         # the degenerate chain
+@example(width=3, n_blocks=2, seed=1)         # cross-block hops
+def test_chained_reduce_tree_matches_numpy(width, n_blocks, seed):
+    """Chained scalar reduction over multi-block operands is bit-identical
+    to the numpy sum for random shapes/precisions, n_blocks=1 included."""
+    rng = np.random.default_rng(seed)
+    n = n_blocks * N_COLS
+    vals = rng.integers(0, 1 << width, size=n)
+    steps, chain_steps = program.full_reduce_steps(n_blocks)
+    total = steps + chain_steps
+    arr = ComefaArray(n_blocks=n_blocks, chain=True)
+    layout.plan_chain(n).place(arr, vals, 0, width)
+    val = list(range(width + total))
+    scratch = list(range(width + total, 2 * (width + total) - 1))
+    cyc = arr.run(program.reduce_to_scalar(val, scratch, width,
+                                           n_blocks=n_blocks))
+    assert cyc == timing.chained_reduction_cycles(width, n_blocks=n_blocks)
+    got = int(layout.extract(arr, 0, width + total, block=0)[0])
+    assert got == int(vals.sum())
 
 
 @given(n=st.integers(2, 10))
