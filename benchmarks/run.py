@@ -4,17 +4,27 @@ Sections:
   * paper_figs  - one benchmark per CoMeFa paper table/figure (Figs 8-12,
                   Tables III/IV), driven by the analytical FPGA model.
   * comefa_sim  - wall-time of the bit-level simulator on representative
-                  programs (throughput of the functional model itself).
+                  programs (throughput of the functional model itself),
+                  including the tiled-GEMM LCU-vs-serial schedule rows.
   * tpu_kernels - bit-plane TPU kernel benchmarks (CPU wall-time of the
                   jnp reference path + Pallas interpret-mode correctness;
                   roofline numbers come from launch/dryrun.py instead).
+
+``--json PATH`` additionally writes the rows as machine-readable JSON.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON to PATH")
+    args = ap.parse_args(argv)
+
     rows: list = []   # (name, us_per_call, derived, paper)
     from benchmarks import paper_figs
     paper_figs.run(rows)
@@ -28,6 +38,13 @@ def main() -> None:
         tpu_kernels.run(rows)
     except Exception as e:  # pragma: no cover
         print(f"# tpu_kernels skipped: {e}", file=sys.stderr)
+
+    if args.json is not None:
+        from benchmarks.sim_speed import _rows_as_json
+        payload = _rows_as_json(rows)
+        payload["benchmark"] = "run_all"
+        with open(args.json, "w") as f:
+            f.write(json.dumps(payload, indent=2) + "\n")
 
     print("name,us_per_call,derived,paper")
     for name, us, derived, paper in rows:

@@ -8,7 +8,12 @@ Reports, for the representative add / mul / OOOR-dot programs:
   * repeat-call timing for a freshly rebuilt (structurally equal) program
     vs. the first call - demonstrating that the encode cache eliminates
     re-encoding on repeated kernel invocations;
-  * `run_programs` batching: N programs in one `lax.scan` dispatch.
+  * `run_programs` batching: N programs in one `lax.scan` dispatch;
+  * the tiled GEMM: LCU-overlapped vs serial-phase schedule cycles and
+    the sim-backed `comefa_gemm` wall-clock.
+
+Run directly with ``--json PATH`` to emit the rows as machine-readable
+JSON (the nightly workflow uploads that file as an artifact).
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ import time
 
 import numpy as np
 
-from repro.core.comefa import ComefaArray, block, layout, program, timing
+from repro.core.comefa import (ComefaArray, block, layout, plan_gemm,
+                               program, timing)
 
 
 def _bench(fn, *, reps=10):
@@ -128,3 +134,74 @@ def run(rows: list) -> None:
                                    x_values=[0b0101010101010101]), None))
     rows.append(("sim/fir_per_sample_cycles_generic_mac", 0.0,
                  timing.mac_cycles(16, 36) / 2, None))
+
+    # tiled GEMM: LCU-overlapped vs serial-phase schedules (cycles), plus
+    # the sim-backed comefa_gemm wall-clock for the same shape
+    from repro.kernels import comefa_sim
+    gm, gk, gn, gbits, gnb = 5, 40, 9, 2, 4      # 5 tiles, ragged last
+    plan = plan_gemm(gm, gk, gn, gbits, n_blocks=gnb)
+    ser = plan.schedule(optimized=False)
+    opt = plan.schedule(optimized=True)
+    tag = f"sim/gemm_m{gm}k{gk}n{gn}_nb{gnb}"
+    rows.append((f"{tag}_cycles_serial", 0.0, ser.serial_cycles, None))
+    rows.append((f"{tag}_cycles_lcu", 0.0, ser.total_cycles, None))
+    rows.append((f"{tag}_cycles_lcu_coissue", 0.0, opt.total_cycles, None))
+    rows.append((f"{tag}_steady_state_cycles", 0.0,
+                 ser.steady_state_cycles, None))
+    rows.append((f"{tag}_serial_tile_cycles", 0.0,
+                 ser.serial_tile_cycles, None))
+    ga = rng.integers(0, 1 << gbits, size=(gm, gk))
+    gb = rng.integers(0, 1 << gbits, size=(gk, gn))
+    us_gemm = _bench(lambda: comefa_sim.comefa_gemm(ga, gb, bits=gbits,
+                                                    n_blocks=gnb), reps=3)
+    us_gemm_unopt = _bench(
+        lambda: comefa_sim.comefa_gemm(ga, gb, bits=gbits, n_blocks=gnb,
+                                       optimized=False), reps=3)
+    rows.append((f"{tag}_us_coissue", us_gemm, us_gemm, None))
+    rows.append((f"{tag}_us_unopt", us_gemm_unopt, us_gemm_unopt, None))
+    # modelled CoMeFa-D hardware time: LCU-pipelined vs serial phases
+    rows.append((f"{tag}_hw_us_comefa_d_lcu", 0.0,
+                 opt.total_cycles / 588e6 * 1e6, None))
+    rows.append((f"{tag}_hw_us_comefa_d_serial", 0.0,
+                 opt.serial_cycles / 588e6 * 1e6, None))
+
+
+def _rows_as_json(rows: list) -> dict:
+    """Machine-readable form of the benchmark rows (nightly artifact)."""
+    return {
+        "benchmark": "sim_speed",
+        "columns": ["name", "us_per_call", "derived", "paper"],
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived,
+             "paper": paper}
+            for name, us, derived, paper in rows],
+    }
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write rows as JSON to PATH ('-' for stdout)")
+    args = ap.parse_args(argv)
+    rows: list = []
+    run(rows)
+    if args.json is not None:
+        payload = json.dumps(_rows_as_json(rows), indent=2)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as f:
+                f.write(payload + "\n")
+    if args.json != "-":
+        print("name,us_per_call,derived,paper")
+        for name, us, derived, paper in rows:
+            p = "" if paper is None else f"{paper:.6g}"
+            print(f"{name},{us:.2f},{derived:.6g},{p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,17 @@
 """CoMeFa compute-in-memory RAM: ISA, IR, bit-level simulator, programs,
-timing."""
-from . import ir, isa, layout, program, timing
+tiled LCU scheduling, timing."""
+from . import ir, isa, layout, program, schedule, timing
 from .block import ComefaArray, ROW_ONES, ROW_ZEROS
 from .ir import Operand, Program, RowAllocator
 from .isa import Instr, N_COLS, N_ROWS, USABLE_ROWS, WORD_BITS
 from .layout import ChainPlan, plan_chain
 from .program import ProgramBuilder
+from .schedule import GemmPlan, GemvPlan, Schedule, plan_gemm, plan_gemv
 
 __all__ = [
-    "ir", "isa", "layout", "program", "timing", "ComefaArray", "Instr",
-    "Program", "ProgramBuilder", "RowAllocator", "Operand", "ChainPlan",
-    "plan_chain", "N_COLS", "N_ROWS", "USABLE_ROWS", "WORD_BITS",
-    "ROW_ONES", "ROW_ZEROS",
+    "ir", "isa", "layout", "program", "schedule", "timing", "ComefaArray",
+    "Instr", "Program", "ProgramBuilder", "RowAllocator", "Operand",
+    "ChainPlan", "plan_chain", "GemmPlan", "GemvPlan", "Schedule",
+    "plan_gemm", "plan_gemv", "N_COLS", "N_ROWS", "USABLE_ROWS",
+    "WORD_BITS", "ROW_ONES", "ROW_ZEROS",
 ]

@@ -310,8 +310,12 @@ class ComefaArray:
         mem, carry, mask = _run(
             jnp.asarray(self.mem), jnp.asarray(self.carry),
             jnp.asarray(self.mask), jnp.asarray(mat), self.chain)
-        self.mem = np.asarray(mem)
-        self.carry = np.asarray(carry)
-        self.mask = np.asarray(mask)
+        # np.array (not asarray): jax hands back read-only views of its
+        # device buffers, and callers interleave port writes / `layout`
+        # placements with runs (the LCU tile loop loads the next tile
+        # after the previous one computed)
+        self.mem = np.array(mem)
+        self.carry = np.array(carry)
+        self.mask = np.array(mask)
         self.cycles += int(mat.shape[0])
         return int(mat.shape[0])

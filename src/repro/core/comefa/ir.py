@@ -585,44 +585,120 @@ def _can_fuse(first: Instr, second: Instr) -> bool:
     return False
 
 
-def coissue_dual_port(slots: List[Slot], live_out=None) -> List[Slot]:
-    """Greedy adjacent-pair packing of independent W1/W2 writes.
+# lookahead bound for the co-issue list scheduler: far enough to clear a
+# typical add/ripple sequence, small enough to keep the pass linear-ish
+COISSUE_WINDOW = 16
 
-    Walks the program left to right; whenever a cycle's Port-B write path
-    is idle and the neighbouring instruction is (or can be rewritten as) a
-    free-riding Port-B write, the two retire together.  TT_ZERO row clears
-    are retargeted onto Port B (`W2_ZERO`) so that zero/copy-heavy
+
+def _hoistable(w: Instr, rows_read, rows_written,
+               carry_dirty: bool, mask_dirty: bool) -> bool:
+    """Can W's write legally move back past the scanned instructions?
+
+    W is a free-riding Port-B write (`_w2_side_ok`).  Hoisting it into an
+    earlier host cycle is sound iff nothing between the host and W's
+    original slot (host included, for the latch conditions) observes the
+    move:
+
+      * no intervening instruction reads W's destination row (it would
+        see the new value early) or writes it (the final value would
+        flip from W's to the intervening write's);
+      * W's data source and predicate sample the latches at the *host*
+        cycle's start, so no instruction from the host up to W's
+        original slot may update a latch W observes (`c_en` vs a
+        `W2_CARRY` source or a carry predicate, `m_en` vs `PRED_MASK`).
+    """
+    if w.dst_row in rows_read or w.dst_row in rows_written:
+        return False
+    reads_carry = ((w.w2_sel == W2_CARRY and not w.c_rst)
+                   or w.pred_sel in (PRED_CARRY, PRED_NOT_CARRY))
+    if reads_carry and carry_dirty:
+        return False
+    if w.pred_sel == PRED_MASK and mask_dirty:
+        return False
+    return True
+
+
+def coissue_dual_port(slots: List[Slot], live_out=None,
+                      window: int = COISSUE_WINDOW) -> List[Slot]:
+    """List-scheduling packer of independent W1/W2 writes.
+
+    Walks the program left to right.  A cycle whose Port-B write path is
+    idle becomes a *host*: the scheduler scans up to `window` following
+    instructions for the first free-riding Port-B write - a carry store,
+    a `W2_ZERO` clear, or a `TT_ZERO` W1 clear rewritable onto Port B
+    (`_as_w2_zero`) - that can soundly retire in the host's cycle
+    (`_hoistable`), and fuses the pair.  Adjacent pairs are the
+    distance-1 special case (the seed pass); the lookahead additionally
+    hoists W2 writes *across* non-conflicting instructions whose own
+    Port B is busy (shifts, other carry stores) - the ROADMAP
+    "co-issue beyond adjacent pairs" list-scheduling variant.
+
+    An instruction that is itself a Port-B write can also ride on the
+    *next* instruction's cycle (the W-first direction of `_can_fuse`):
+    its sources sample pre-cycle latches either way, so the engine
+    semantics match the original order exactly.
+
+    TT_ZERO row clears are retargeted onto Port B so zero/copy-heavy
     sequences - operand clears, predicated select patterns, multiplier
     partial-product initialisation - pack two rows per cycle.
     """
+    instrs: List[Instr] = []
+    for slot in slots:
+        if len(slot) != 1:
+            raise ValueError("coissue_dual_port must run on unfused slots")
+        instrs.append(slot[0])
+    n = len(instrs)
+    effs = [instr_effects(ins) for ins in instrs]
+    riders = [ins if _w2_side_ok(ins) else _as_w2_zero(ins)
+              for ins in instrs]
+    consumed = [False] * n
     out: List[Slot] = []
-    idx = 0
-    while idx < len(slots):
-        slot = slots[idx]
-        if len(slot) != 1 or idx + 1 >= len(slots) \
-                or len(slots[idx + 1]) != 1:
-            out.append(slot)
-            idx += 1
+    for i in range(n):
+        if consumed[i]:
             continue
-        x, y = slot[0], slots[idx + 1][0]
-        fused = None
-        if _can_fuse(x, y):
-            fused = (x, y)
-        else:
-            # try rewriting one side's W1 zero-write onto Port B
-            y2 = _as_w2_zero(y)
-            if y2 is not None and _can_fuse(x, y2):
-                fused = (x, y2)
-            else:
-                x2 = _as_w2_zero(x)
+        x = instrs[i]
+        fused = False
+        if not x.wp2_en:
+            # host candidate: scan the window for a hoistable W2 rider
+            rows_read: set = set()
+            rows_written: set = set()
+            carry_dirty = bool(x.c_en)
+            mask_dirty = bool(x.m_en)
+            scanned = 0
+            j = i + 1
+            while j < n and scanned < window:
+                if consumed[j]:
+                    j += 1
+                    continue
+                w = riders[j]
+                if w is not None and _hoistable(w, rows_read, rows_written,
+                                                carry_dirty, mask_dirty):
+                    out.append((x, w))
+                    consumed[j] = True
+                    fused = True
+                    break
+                eff = effs[j]
+                rows_read |= eff.reads
+                rows_written |= eff.writes
+                carry_dirty |= eff.writes_carry
+                mask_dirty |= eff.writes_mask
+                scanned += 1
+                j += 1
+        if not fused:
+            # W-first direction: x (a Port-B write) rides on the next
+            # instruction's cycle
+            j = i + 1
+            while j < n and consumed[j]:
+                j += 1
+            if j < n:
+                y = instrs[j]
+                x2 = riders[i]
                 if x2 is not None and _can_fuse(x2, y):
-                    fused = (x2, y)
-        if fused is not None:
-            out.append(fused)
-            idx += 2
-        else:
-            out.append(slot)
-            idx += 1
+                    out.append((x2, y))
+                    consumed[j] = True
+                    fused = True
+        if not fused:
+            out.append((x,))
     return out
 
 

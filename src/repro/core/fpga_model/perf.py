@@ -19,6 +19,7 @@ speedups.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional
 
 from ..comefa import timing
@@ -78,6 +79,31 @@ def _eff(bench: str, variant: str) -> float:
 # compute-bound: GEMV (int8, DeepBench LSTM h=512 t=50)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _gemv_scheduled_macs_per_lane_cycle(w_bits: int, x_bits: int,
+                                        acc_bits: int) -> float:
+    """Steady-state MACs/cycle/lane of the real tiled GEMV schedule.
+
+    Builds a `comefa.schedule.GemvPlan` LCU schedule - k chunked through
+    double-buffered resident-weight regions, activations streamed OOOR
+    with the deterministic average-density bit pattern the achieved
+    timing entries use - and reads off the steady-state (pipeline-full)
+    tile cost: max(load, compute), the load overlapped behind compute.
+    Four chunks are enough to reach steady state; each lane retires
+    ``k_tile`` MACs per tile (the caller scales by the variant's lane
+    count, as the closed-form branch does).
+    """
+    from ..comefa import schedule as csched
+    from ..comefa.isa import N_COLS
+    k_tile = csched.gemv_k_tile(w_bits, acc_bits)
+    k = 4 * k_tile
+    plan = csched.plan_gemv(k, N_COLS, w_bits, x_bits, acc_bits)
+    pattern = sum(1 << b for b in range(0, x_bits, 2))
+    sched = plan.schedule([pattern] * k, optimized=True)
+    steady = max(max(c) for c in sched.tile_costs[1:-1])  # pipeline-full
+    return k_tile / steady
+
+
 def gemv(variant: str, h: int = 512, t: int = 50,
          achieved: bool = False) -> BenchResult:
     """Work is split between DSP chains and CoMeFa RAMs (Sec. IV-C).
@@ -85,17 +111,29 @@ def gemv(variant: str, h: int = 512, t: int = 50,
     Baseline: DSP-chain MACs at int8.  Proposed: DSPs + CoMeFa RAMs running
     the OOOR dot product (zero-bit skipping halves the per-MAC cycles,
     Sec. III-I); weights are pinned transposed, the vector streams.
-    With `achieved=True` the CoMeFa-side cycle count is the IR-optimized
-    schedule (`timing.achieved_mac_cycles`) instead of the closed form.
+
+    With `achieved=True` the CoMeFa side is priced from the *real*
+    scheduled program: the `comefa.schedule.GemvPlan` LCU pipeline
+    (weights chunked through double-buffered row regions, loads hidden
+    behind the streamed OOOR compute, int8 operands / 27-bit
+    accumulator as in Table II).  The closed-form default keeps the
+    paper's generic-MAC-halved estimate, validated against Fig 9; the
+    scheduled count is honest about the accumulator ripple every real
+    add pays, so the achieved speedup sits below the paper point.
     """
     macs = 4 * h * (2 * h) * t                     # LSTM gate GEMVs
     base_rate = dsp_mac_throughput("int8") + lb_mac_throughput("int8")
     v = R.VARIANTS[variant]
-    cyc = (timing.achieved_mac_cycles(8, 27) if achieved
-           else timing.mac_cycles(8, 27))
-    if v.supports_ooor:
-        cyc = cyc / 2                              # OOOR zero-bit skipping
-    ram_rate = R.BRAMS * v.lanes * v.freq / (cyc * v.logic_cycle_factor)
+    if achieved and v.supports_ooor:
+        per_lane = _gemv_scheduled_macs_per_lane_cycle(8, 8, 27)
+        ram_rate = (R.BRAMS * v.lanes * per_lane * v.freq
+                    / v.logic_cycle_factor)
+    else:
+        cyc = (timing.achieved_mac_cycles(8, 27) if achieved
+               else timing.mac_cycles(8, 27))
+        if v.supports_ooor:
+            cyc = cyc / 2                          # OOOR zero-bit skipping
+        ram_rate = R.BRAMS * v.lanes * v.freq / (cyc * v.logic_cycle_factor)
     ram_rate *= _eff("gemv", variant)
     return BenchResult("gemv", variant, macs / base_rate,
                        macs / (base_rate + ram_rate))

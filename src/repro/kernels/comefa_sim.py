@@ -14,7 +14,8 @@ so this backend targets correctness checks and benchmarking, not
 throughput.  *Lane* budgets are not bounded: `comefa_dot` and
 `comefa_fir` spread one logical operand across ``n_blocks * 160`` lanes
 of a chain=True array (Sec. III-F shift chaining) and reduce across the
-whole chain.
+whole chain, and `comefa_gemm` / `comefa_gemv` tile whole GEMM/GEMV
+problems through `core.comefa.schedule`'s double-buffered LCU plans.
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.comefa import ComefaArray, N_COLS, layout, program
+from ..core.comefa import ComefaArray, N_COLS, layout, program, schedule
 from ..core.comefa.ir import Program, RowAllocator
 from ..core.comefa.isa import USABLE_ROWS, ceil_log2
 
@@ -83,37 +84,82 @@ def comefa_eltwise_mul(a: np.ndarray, b: np.ndarray, *, bits: int,
 
 
 def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
-                x_bits: int, acc_bits: int = 32) -> np.ndarray:
+                x_bits: int, acc_bits: int = 32,
+                optimized: bool = True) -> np.ndarray:
     """y = w.T @ x with resident weights and a streamed vector (OOOR).
 
-    w: [k, n] unsigned ints; x: [k] unsigned ints.  One OOOR dot-product
-    program computes all n outputs across lanes/blocks; the program depends
-    on x (the FSM inspects the outside operand - Sec. III-I), so it is
-    rebuilt per x but still IR-optimized (zero-skip + co-issued clears).
+    w: [k, n] unsigned ints; x: [k] unsigned ints.  The k dimension is
+    chunked through `schedule.GemvPlan`'s double-buffered weight regions
+    (chunk t+1 would load while chunk t computes on hardware), so k is no
+    longer capped by the one-shot row budget; each chunk's OOOR program
+    depends on x (the FSM inspects the outside operand - Sec. III-I), so
+    programs are rebuilt per x but still IR-optimized (zero-skip +
+    co-issued clears).  Partial sums accumulate in the shared
+    accumulator; all n outputs extract after the last chunk.
     """
     w = np.asarray(w)
     x = np.asarray(x).ravel()
     k, n = w.shape
     assert x.shape[0] == k
-    demand = k * w_bits + acc_bits
-    assert demand <= USABLE_ROWS, (
-        f"operands need {demand} rows ({k} weights x {w_bits} bits + "
-        f"{acc_bits} accumulator bits), only {USABLE_ROWS} usable rows "
-        f"per block (N_ROWS minus reserved constant rows)")
-    bld = program.ProgramBuilder(f"gemv_k{k}")
-    w_ops = [bld.input(w_bits, f"w{j}") for j in range(k)]
-    acc = bld.dot(w_ops, [int(v) for v in x], x_bits, acc_bits)
-    prog = bld.build()
-    lanes = N_COLS
-    n_blocks = max(1, -(-n // lanes))
-    pad = n_blocks * lanes - n
-    arr = ComefaArray(n_blocks=n_blocks)
-    for j in range(k):
-        wj = np.pad(w[j], (0, pad)).reshape(n_blocks, lanes)
-        layout.place(arr, wj, w_ops[j].base, w_bits)
-    arr.run(prog)
-    out = layout.extract(arr, acc.base, acc_bits)
+    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits)
+    nb, lanes = plan.n_blocks, N_COLS
+    pad = nb * lanes - n
+    arr = ComefaArray(n_blocks=nb)
+    for tile in plan.tiles():
+        buf = plan.buffers[tile.buffer]
+        for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
+            wj = np.pad(w[j], (0, pad)).reshape(nb, lanes)
+            rows = buf.weight_rows(j_local, w_bits)
+            layout.place(arr, wj, rows.base, w_bits)
+        arr.run(plan.tile_program(tile, x[tile.k_start:tile.k_end],
+                                  optimized=optimized))
+    out = layout.extract(arr, plan.acc.base, acc_bits)
     return out.reshape(-1)[:n]
+
+
+def comefa_gemm(a: np.ndarray, b: np.ndarray, *, bits: int,
+                n_blocks: int = 1, optimized: bool = True) -> np.ndarray:
+    """C = a @ b on the bit-level simulator via the tiled LCU plan.
+
+    a: [m, k], b: [k, n] unsigned ints below 2**bits.  `schedule.plan_gemm`
+    packs `dots_per_tile` output dot products per tile across the
+    ``n_blocks * 160``-lane chain (each in a ``2^ceil(log2(k))``-lane
+    group); the tile program - a lane-wise multiply plus a
+    `program.reduce_tree` group reduction - leaves every packed dot in
+    its group-head lane.  Tiles alternate between the plan's two
+    double-buffered row regions (the layout that lets load/unload overlap
+    compute on hardware; the simulator executes them back-to-back) and
+    results drain from the head lanes after each tile.
+
+    Bit-exact against ``np.matmul``; with ``optimized=False`` the total
+    simulator cycles are exactly ``n_tiles`` times the closed-form tile
+    compute cost priced inside `timing.gemm_cycles`.
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    m, k = a.shape
+    n = b.shape[1]
+    plan = schedule.plan_gemm(m, k, n, bits, n_blocks=n_blocks)
+    lane_plan = plan.lane_plan()
+    arr = ComefaArray(n_blocks=plan.n_blocks, chain=True)
+    out = np.empty(plan.n_outputs, dtype=np.int64)
+    for tile in plan.tiles():
+        buf = plan.buffers[tile.buffer]
+        xv, yv = plan.tile_operands(tile, a, b)
+        lane_plan.place(arr, xv, buf.x.base, bits)
+        lane_plan.place(arr, yv, buf.y.base, bits)
+        arr.run(plan.compute_program(tile.buffer, optimized=optimized))
+        heads = plan.head_lanes(tile)
+        vals = np.empty(tile.n_dots, dtype=np.int64)
+        for blk in range(plan.n_blocks):
+            sel = (heads // N_COLS) == blk
+            if sel.any():
+                vals[sel] = layout.extract(arr, buf.acc.base, plan.acc_bits,
+                                           lanes=heads[sel] % N_COLS,
+                                           block=blk)
+        out[tile.out_start:tile.out_end] = vals
+    return out.reshape(m, n)
 
 
 def comefa_dot(a: np.ndarray, b: np.ndarray, *, bits: int,

@@ -58,13 +58,41 @@ def test_plan_chain_port_order_matches_load_transposed_phases():
 
 
 @pytest.mark.parametrize("order", ["linear", "port"])
-@pytest.mark.parametrize("n", [100, 333])
+@pytest.mark.parametrize("n", [1, 39, 100, 161, 333, 479])
 def test_plan_place_extract_roundtrip(order, n):
+    """Round trips on both lane orders, including ragged shapes: n not a
+    multiple of 160 (39, 161, 333, 479) and n below one block (1, 39)."""
     plan = plan_chain(n, order=order)
+    assert plan.n_blocks == -(-n // N_COLS)
     vals = RNG.integers(0, 256, size=n)
     arr = ComefaArray(n_blocks=plan.n_blocks, chain=True)
     plan.place(arr, vals, 4, 8)
     np.testing.assert_array_equal(plan.extract(arr, 4, 8), vals)
+
+
+@pytest.mark.parametrize("order", ["linear", "port"])
+@pytest.mark.parametrize("n", [1, 39, 161, 479])
+def test_plan_chain_ragged_lanes_in_bounds_and_unique(order, n):
+    """Ragged plans keep every element on a distinct in-range global lane
+    (a duplicate or out-of-range lane would silently alias elements)."""
+    plan = plan_chain(n, order=order)
+    g = plan.lanes()
+    assert g.shape == (n,)
+    assert g.min() >= 0 and g.max() < plan.total_lanes
+    assert len(np.unique(g)) == n
+
+
+def test_plan_chain_ragged_place_leaves_other_lanes_untouched():
+    """Placing a ragged operand must not clobber lanes past n_elems."""
+    n = 161
+    plan = plan_chain(n)
+    arr = ComefaArray(n_blocks=plan.n_blocks, chain=True)
+    sentinel = np.ones((plan.n_blocks, N_COLS), dtype=np.int64)
+    layout.place(arr, sentinel, 20, 1)            # mark every lane
+    plan.place(arr, np.zeros(n, dtype=np.int64), 20, 1)
+    got = layout.extract(arr, 20, 1).reshape(-1)
+    assert not got[:n].any()                      # placed lanes cleared
+    assert got[n:].all()                          # the rest untouched
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +251,35 @@ def test_comefa_fir_unoptimized_cycles_equal_fir_cycles():
     full = program.fir(tap_rows, acc, [int(v) for v in x], xb)
     assert full.cycles == arr.cycles
     assert full.optimize().cycles <= full.cycles
+
+
+def test_fir_cache_fifo_eviction_bound_and_correctness(monkeypatch):
+    """Overflow the per-sample program cache: the FIFO eviction must keep
+    the size bounded AND evicted entries must rebuild correctly when
+    their sample value recurs later in the stream."""
+    monkeypatch.setattr(comefa_sim, "_FIR_CACHE", {})
+    monkeypatch.setattr(comefa_sim, "_FIR_CACHE_MAX", 4)
+    tb = xb = 3
+    taps = RNG.integers(0, 1 << tb, size=8)
+    # 7 distinct sample values + the init/shift entries >> 4 slots; the
+    # tail revisits 1, 2, 3 after they were evicted
+    x = np.array([1, 2, 3, 4, 5, 6, 7, 1, 2, 3], dtype=np.int64)
+    got = comefa_sim.comefa_fir(taps, x, tap_bits=tb, x_bits=xb)
+    np.testing.assert_array_equal(got, fir_ref(taps, x))
+    assert 0 < len(comefa_sim._FIR_CACHE) <= 4
+
+
+def test_fir_cache_eviction_is_fifo_order(monkeypatch):
+    monkeypatch.setattr(comefa_sim, "_FIR_CACHE", {})
+    monkeypatch.setattr(comefa_sim, "_FIR_CACHE_MAX", 3)
+    tb = xb = 2
+    taps = RNG.integers(0, 1 << tb, size=4)
+    comefa_sim.comefa_fir(taps, np.array([1, 2, 3]), tap_bits=tb, x_bits=xb)
+    keys = list(comefa_sim._FIR_CACHE)
+    # insertion order was init, shift, 1, 2, 3: the oldest two evicted
+    tails = [k[4] for k in keys]
+    assert "init" not in tails and "shift" not in tails
+    assert tails == [1, 2, 3]
 
 
 def test_fir_cycles_average_density_estimate_is_close():

@@ -1,0 +1,237 @@
+"""Tiled GEMM/GEMV scheduling with load-compute-unload overlap.
+
+Covers the planning subsystem end-to-end: `schedule.plan_gemm` geometry
+and row budgeting, the pipelined `Schedule` timeline (double-buffer lag,
+engine serialisation, steady-state = bottleneck phase), the sim-backed
+`comefa_gemm` kernel (bit-exact vs np.matmul across n_blocks 1/2/4
+including ragged tiles), the `timing.gemm_cycles` /
+`achieved_gemm_cycles` closed forms (cycle-exact vs the generated
+schedule), the k-chunked `comefa_gemv`, and the perf-model wiring
+(`perf.gemv(achieved=True)` priced from the real schedule).
+"""
+import numpy as np
+import pytest
+
+from repro.core.comefa import (N_COLS, USABLE_ROWS, plan_gemm, plan_gemv,
+                               schedule, timing)
+from repro.kernels import comefa_sim
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# GemmPlan geometry + row budget
+# ---------------------------------------------------------------------------
+
+def test_plan_gemm_geometry():
+    p = plan_gemm(4, 8, 6, bits=2, n_blocks=1)
+    assert (p.group, p.steps, p.acc_bits) == (8, 3, 7)
+    assert p.dots_per_tile == N_COLS // 8 == 20
+    assert p.n_tiles == 2                       # 24 outputs / 20 per tile
+    tiles = p.tiles()
+    assert [t.n_dots for t in tiles] == [20, 4]  # ragged last tile
+    assert [t.buffer for t in tiles] == [0, 1]   # alternating buffers
+
+
+def test_plan_gemm_non_power_of_two_k_pads_group():
+    p = plan_gemm(2, 5, 2, bits=2, n_blocks=1)
+    assert p.group == 8 and p.steps == 3        # k=5 padded to an 8-lane group
+
+
+def test_plan_gemm_k_exceeding_chain_raises():
+    with pytest.raises(ValueError):
+        plan_gemm(1, 200, 1, bits=2, n_blocks=1)   # group 256 > 160 lanes
+    plan_gemm(1, 200, 1, bits=2, n_blocks=2)       # fits two chained blocks
+
+
+def test_plan_gemm_row_budget_raises():
+    with pytest.raises(ValueError):
+        plan_gemm(2, 8, 2, bits=16, n_blocks=1)    # 2*(32+35)+34 rows > 126
+
+
+def test_plan_gemm_buffers_disjoint_and_within_budget():
+    p = plan_gemm(4, 40, 4, bits=4, n_blocks=2)
+    regions = [set(p.buffers[0].x), set(p.buffers[0].y), set(p.buffers[0].acc),
+               set(p.buffers[1].x), set(p.buffers[1].y), set(p.buffers[1].acc),
+               set(p.scratch)]
+    all_rows = set().union(*regions)
+    assert sum(len(r) for r in regions) == len(all_rows)   # pairwise disjoint
+    assert len(all_rows) <= USABLE_ROWS
+
+
+# ---------------------------------------------------------------------------
+# the pipelined Schedule timeline
+# ---------------------------------------------------------------------------
+
+def test_schedule_uniform_tiles_reach_steady_state():
+    s = schedule.Schedule([(10, 30, 5)] * 6)
+    assert s.serial_cycles == 6 * 45
+    assert s.steady_state_cycles == 30          # bottleneck phase
+    assert s.serial_tile_cycles == 45
+    # fill (load 10) + 6 compute-bound tiles + drain (unload 5)
+    assert s.total_cycles == 10 + 6 * 30 + 5
+    assert s.total_cycles < s.serial_cycles
+
+
+def test_schedule_timeline_invariants():
+    costs = [(7, 20, 9)] * 5
+    s = schedule.Schedule(costs)
+    spans = {(p.tile, p.kind): p for p in s.timeline()}
+    for t in range(5):
+        ld, cp, un = spans[t, "load"], spans[t, "compute"], spans[t, "unload"]
+        assert ld.end <= cp.start or cp.start == ld.end
+        assert cp.end <= un.start or un.start == cp.end
+        assert (ld.cycles, cp.cycles, un.cycles) == costs[t]
+        if t:
+            # each engine runs one tile at a time, in order
+            assert spans[t - 1, "load"].end <= ld.start
+            assert spans[t - 1, "compute"].end <= cp.start
+            assert spans[t - 1, "unload"].end <= un.start
+        if t >= 2:
+            # double buffering: operand buffer reused only after the
+            # compute two tiles back released it (and acc after unload)
+            assert spans[t - 2, "compute"].end <= ld.start
+            assert spans[t - 2, "unload"].end <= cp.start
+
+
+def test_schedule_load_bound_pipeline():
+    # when load dominates, compute waits on the load engine
+    s = schedule.Schedule([(50, 10, 5)] * 4)
+    assert s.steady_state_cycles == 50
+    assert s.total_cycles == 4 * 50 + 10 + 5
+
+
+# ---------------------------------------------------------------------------
+# comefa_gemm: bit-exact vs np.matmul (acceptance: n_blocks 1/2/4 + ragged)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bits,n_blocks", [
+    (3, 8, 5, 2, 1),      # single ragged tile
+    (4, 16, 7, 3, 1),     # multi-tile, ragged last (28 = 10 + 10 + 8)
+    (4, 64, 3, 2, 2),     # chained 2-block groups, ragged last tile
+    (5, 40, 9, 2, 4),     # 4 blocks, 64-lane groups straddling seams
+    (2, 5, 7, 3, 1),      # non-power-of-two k (zero-padded group lanes)
+])
+def test_comefa_gemm_bit_exact(m, k, n, bits, n_blocks):
+    a = RNG.integers(0, 1 << bits, size=(m, k))
+    b = RNG.integers(0, 1 << bits, size=(k, n))
+    got = comefa_sim.comefa_gemm(a, b, bits=bits, n_blocks=n_blocks)
+    np.testing.assert_array_equal(got, a.astype(np.int64) @ b)
+
+
+def test_comefa_gemm_ragged_tile_not_polluted_by_previous_tile():
+    """The ragged last tile reuses a buffer a full tile wrote: its unused
+    lanes must be reloaded with zeros, not stale operands."""
+    m, k, n, bits = 5, 8, 9, 3                 # 45 outputs, tiles of 20
+    a = np.full((m, k), (1 << bits) - 1)       # worst case: all-ones stale
+    b = np.full((k, n), (1 << bits) - 1)
+    got = comefa_sim.comefa_gemm(a, b, bits=bits, n_blocks=1)
+    np.testing.assert_array_equal(got, a.astype(np.int64) @ b)
+
+
+def test_comefa_gemm_unoptimized_cycles_match_plan():
+    from repro.core.comefa import ComefaArray
+    m, k, n, bits, nb = 4, 16, 7, 3, 1
+    plan = plan_gemm(m, k, n, bits, n_blocks=nb)
+    expect = (timing.mul_cycles(bits) + plan.steps
+              + timing.reduction_cycles(2 * bits, steps=plan.steps))
+    assert plan.compute_cycles(optimized=False) == expect
+    # the kernel's tile loop spends exactly n_tiles tile programs
+    arr = ComefaArray(n_blocks=nb, chain=True)
+    for tile in plan.tiles():
+        arr.run(plan.compute_program(tile.buffer, optimized=False))
+    assert arr.cycles == plan.n_tiles * expect
+    assert plan.compute_cycles(optimized=True) <= expect
+
+
+# ---------------------------------------------------------------------------
+# closed forms: timing.gemm_cycles / achieved_gemm_cycles (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bits,n_blocks", [
+    (3, 8, 5, 2, 1), (4, 16, 7, 3, 1), (4, 64, 3, 2, 2), (5, 40, 9, 2, 4)])
+def test_gemm_cycles_match_schedule_cycle_exact(m, k, n, bits, n_blocks):
+    plan = plan_gemm(m, k, n, bits, n_blocks=n_blocks)
+    sched = plan.schedule(optimized=False)
+    assert timing.gemm_cycles(m, k, n, bits, n_blocks=n_blocks) \
+        == sched.total_cycles
+    assert timing.gemm_cycles(m, k, n, bits, n_blocks=n_blocks, lcu=False) \
+        == sched.serial_cycles
+
+
+def test_achieved_gemm_cycles_match_optimized_schedule():
+    m, k, n, bits, nb = 4, 64, 3, 2, 2
+    sched = plan_gemm(m, k, n, bits, n_blocks=nb).schedule(optimized=True)
+    assert timing.achieved_gemm_cycles(m, k, n, bits, nb) \
+        == sched.total_cycles
+    assert timing.achieved_gemm_cycles(m, k, n, bits, nb) \
+        <= timing.gemm_cycles(m, k, n, bits, n_blocks=nb)
+
+
+def test_lcu_overlap_beats_serial_schedule():
+    """Acceptance: steady-state tile cost strictly below the serial
+    load+compute+unload sum, and the pipelined makespan strictly below
+    the serial one, for a multi-tile GEMM."""
+    plan = plan_gemm(5, 40, 9, bits=2, n_blocks=4)
+    assert plan.n_tiles > 1
+    sched = plan.schedule(optimized=False)
+    assert sched.steady_state_cycles < sched.serial_tile_cycles
+    assert sched.total_cycles < sched.serial_cycles
+
+
+# ---------------------------------------------------------------------------
+# GemvPlan: k-chunked streamed GEMV
+# ---------------------------------------------------------------------------
+
+def test_plan_gemv_chunks_and_budget():
+    p = plan_gemv(40, 200, w_bits=5, x_bits=5, acc_bits=24)
+    assert p.k_tile == (USABLE_ROWS - 24) // 10
+    assert p.n_tiles == -(-40 // p.k_tile)
+    assert p.n_blocks == 2
+    rows = [set(p.buffers[0].rows), set(p.buffers[1].rows), set(p.acc)]
+    assert sum(len(r) for r in rows) == len(set().union(*rows))
+    with pytest.raises(ValueError):
+        plan_gemv(8, 8, w_bits=30, x_bits=4, acc_bits=120)  # no room
+
+
+def test_comefa_gemv_chunked_k_beyond_old_row_budget():
+    """k * w_bits + acc_bits = 224 rows >> 126: only schedulable chunked."""
+    k, n = 40, 200
+    w = RNG.integers(0, 32, size=(k, n))
+    x = RNG.integers(0, 32, size=k)
+    got = comefa_sim.comefa_gemv(w, x, w_bits=5, x_bits=5, acc_bits=24)
+    np.testing.assert_array_equal(got, (w * x[:, None]).sum(0))
+
+
+def test_gemv_schedule_hides_loads_behind_compute():
+    p = plan_gemv(24, 160, w_bits=8, x_bits=8, acc_bits=27, k_tile=6)
+    x = [0b01010101] * 24
+    sched = p.schedule(x, optimized=False)
+    # every tile loads, only the last unloads
+    assert all(c[0] > 0 for c in sched.tile_costs)
+    assert [c[2] > 0 for c in sched.tile_costs] == [False] * 3 + [True]
+    assert sched.total_cycles < sched.serial_cycles
+
+
+# ---------------------------------------------------------------------------
+# perf wiring: GEMV priced from the real schedule (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_perf_gemv_achieved_prices_from_schedule():
+    from repro.core.fpga_model import perf
+    closed = perf.gemv("comefa-d").speedup
+    achieved = perf.gemv("comefa-d", achieved=True).speedup
+    assert achieved > 1.0                      # still a real speedup
+    assert achieved != closed                  # really priced differently
+    # the scheduled program pays the honest accumulator ripple the
+    # paper's halved-MAC estimate skips: achieved sits below closed
+    assert achieved < closed
+    # covered in the full achieved table
+    table = perf.run_all(achieved=True)
+    assert table["gemv"]["comefa-d"] == pytest.approx(achieved)
+
+
+def test_perf_gemv_closed_form_unchanged():
+    from repro.core.fpga_model import perf
+    got = perf.gemv("comefa-d").speedup
+    assert abs(got - perf.PAPER_SPEEDUPS["gemv"]["comefa-d"]) < 0.15
