@@ -96,6 +96,33 @@ def run(rows: list) -> None:
     rows.append(("sim/add8_x8_looped_us", us_loop, us_loop, None))
     rows.append(("sim/add8_x8_batched_us", us_batch, us_batch, None))
 
+    # grid-vs-loop: G independent arrays executing one shared program -
+    # a Python loop of ComefaArray.run() calls (G separate scan
+    # dispatches + G host/device round trips) vs ONE fused ComefaGrid
+    # scan over the stacked state.  The fused dispatch must win
+    # for G >= 8: that is the speedup every sharded sweep rides on.
+    from repro.core.comefa import ComefaGrid
+    grid_prog = mk_mul().optimize()
+    for g in (1, 8):
+        arrays = [ComefaArray(n_blocks=2) for _ in range(g)]
+        for i, ga in enumerate(arrays):
+            av = rng.integers(0, 1 << n, size=(2, 160))
+            bv = rng.integers(0, 1 << n, size=(2, 160))
+            layout.place(ga, av, 0, n)
+            layout.place(ga, bv, n, n)
+        gridarr = ComefaGrid.from_arrays(arrays)
+        us_gloop = _bench(lambda: [ga.run(grid_prog) for ga in arrays])
+        us_fused = _bench(lambda: gridarr.run(grid_prog))
+        rows.append((f"sim/grid_g{g}_loop_us", us_gloop, us_gloop, None))
+        rows.append((f"sim/grid_g{g}_fused_us", us_fused, us_fused, None))
+        rows.append((f"sim/grid_g{g}_fused_speedup", 0.0,
+                     us_gloop / us_fused, None))
+    # modelled fleet-level counterpart: shared-FSM slices vs one looped
+    # FSM on CoMeFa-D hardware (perf.gemv_grid)
+    from repro.core.fpga_model import perf
+    rows.append(("sim/grid_g8_hw_speedup_comefa_d", 0.0,
+                 perf.gemv_grid("comefa-d", g=8).speedup, None))
+
     # modelled CoMeFa-D hardware time for the same program, for scale
     hw_us = timing.mul_cycles(n) / 588e6 * 1e6
     rows.append(("sim/mul8_hw_us_comefa_d", 0.0, hw_us, None))

@@ -1,7 +1,8 @@
 """CoMeFa compute-in-memory RAM: ISA, IR, bit-level simulator, programs,
 tiled LCU scheduling, timing."""
-from . import ir, isa, layout, program, schedule, timing
+from . import grid, ir, isa, layout, program, schedule, timing
 from .block import ComefaArray, ROW_ONES, ROW_ZEROS
+from .grid import ComefaGrid, grid_mesh, grid_shardings
 from .ir import Operand, Program, RowAllocator
 from .isa import Instr, N_COLS, N_ROWS, USABLE_ROWS, WORD_BITS
 from .layout import ChainPlan, plan_chain
@@ -9,7 +10,8 @@ from .program import ProgramBuilder
 from .schedule import GemmPlan, GemvPlan, Schedule, plan_gemm, plan_gemv
 
 __all__ = [
-    "ir", "isa", "layout", "program", "schedule", "timing", "ComefaArray",
+    "grid", "ir", "isa", "layout", "program", "schedule", "timing",
+    "ComefaArray", "ComefaGrid", "grid_mesh", "grid_shardings",
     "Instr", "Program", "ProgramBuilder", "RowAllocator", "Operand",
     "ChainPlan", "plan_chain", "GemmPlan", "GemvPlan", "Schedule",
     "plan_gemm", "plan_gemv", "N_COLS", "N_ROWS", "USABLE_ROWS",

@@ -59,10 +59,65 @@ _LATCH_CLEAR_MAT = np.array([isa.latch_clear().engine_vector()],
                             dtype=np.int32)
 
 
+def _concat_encoded(mats, reset_latches: bool):
+    """Concatenate encoded programs for one batched dispatch.
+
+    Returns ``(matrix, per_program_counts)``; with `reset_latches` a
+    one-cycle `isa.latch_clear` row is inserted at every boundary and
+    charged to the *following* program's count.  Shared by
+    `ComefaArray.run_programs` and `grid.ComefaGrid.run_programs` so the
+    boundary semantics cannot drift apart.
+    """
+    if reset_latches and len(mats) > 1:
+        parts, counts = [mats[0]], [int(mats[0].shape[0])]
+        for m in mats[1:]:
+            parts += [_LATCH_CLEAR_MAT, m]
+            counts.append(int(m.shape[0]) + 1)
+    else:
+        parts, counts = list(mats), [int(m.shape[0]) for m in mats]
+    return np.concatenate(parts, axis=0), counts
+
+
+def _port_word_cols(addr: int) -> np.ndarray:
+    """Columns of the 40-bit hybrid-mode word at logical address `addr`."""
+    phase = addr & (COL_MUX - 1)
+    return np.arange(WORD_BITS) * COL_MUX + phase
+
+
+def write_port_word(mem: np.ndarray, block: int, addr: int,
+                    word: int) -> None:
+    """Memory-mode style write of one 40-bit word into `mem[block]`.
+
+    Shared by `ComefaArray.write_word` and grid slot views - one home
+    for the address guard and the bit packing.
+    """
+    assert 0 <= addr < N_ROWS * COL_MUX and addr != isa.INSTR_ADDR
+    row, cols = addr // COL_MUX, _port_word_cols(addr)
+    bits = (word >> np.arange(WORD_BITS)) & 1
+    mem[block, row, cols] = bits.astype(np.uint8)
+
+
+def read_port_word(mem: np.ndarray, block: int, addr: int) -> int:
+    # mirror write_port_word's checks: an out-of-range read would
+    # otherwise index garbage rows instead of failing loudly
+    assert 0 <= addr < N_ROWS * COL_MUX and addr != isa.INSTR_ADDR
+    row, cols = addr // COL_MUX, _port_word_cols(addr)
+    bits = mem[block, row, cols].astype(np.int64)
+    return int((bits << np.arange(WORD_BITS)).sum())
+
+
 def _step(chain: bool, state, fields):
-    """One CoMeFa cycle. state = (mem[nb,R,C], carry[nb,C], mask[nb,C])."""
+    """One CoMeFa cycle. state = (mem[..., R, C], carry[..., C], mask[..., C]).
+
+    Rank-polymorphic over leading axes: a single array runs with
+    ``mem[nb, R, C]``; `grid.ComefaGrid` stacks G arrays as
+    ``mem[G, nb, R, C]`` and reuses this exact step (and `_run`) for its
+    fused whole-grid dispatch - the grid axis is just one more
+    elementwise dimension to XLA, with no vmap batching overhead.  With
+    ``chain=True`` the shift network flattens only the trailing
+    ``(nb, C)`` axes, so RAM-to-RAM chaining never crosses grid slots.
+    """
     mem, carry, mask = state
-    nb = mem.shape[0]
 
     src1 = fields[_F["src1_row"]]
     src2 = fields[_F["src2_row"]]
@@ -82,8 +137,8 @@ def _step(chain: bool, state, fields):
     pred2_sel = fields[_F["pred2_sel"]]
 
     # ---- phase 1: read (one row per port) -------------------------------
-    a = jnp.take(mem, src1, axis=1)                      # [nb, C]
-    b_read = jnp.take(mem, src2, axis=1)
+    a = jnp.take(mem, src1, axis=-2)                     # [..., C]
+    b_read = jnp.take(mem, src2, axis=-2)
     b = jnp.where(b_ext == 1, jnp.full_like(b_read, ext_bit), b_read)
 
     # ---- phase 2: compute ----------------------------------------------
@@ -108,17 +163,21 @@ def _step(chain: bool, state, fields):
 
     # ---- phase 3: write-back -------------------------------------------
     # neighbour S values for shifts; chain=True threads corner PEs of
-    # adjacent blocks together (RAM-to-RAM chaining, Fig 6b).
+    # adjacent blocks together (RAM-to-RAM chaining, Fig 6b) - flattening
+    # only the trailing (nb, C) axes, so any leading grid axis stays a
+    # hard seam between independent slots.
     if chain:
-        s_flat = s.reshape(-1)
-        from_right = jnp.concatenate([s_flat[1:], jnp.zeros((1,), s.dtype)])
-        from_left = jnp.concatenate([jnp.zeros((1,), s.dtype), s_flat[:-1]])
+        lead = s.shape[:-2]
+        s_flat = s.reshape(lead + (-1,))
+        z1 = jnp.zeros(lead + (1,), s.dtype)
+        from_right = jnp.concatenate([s_flat[..., 1:], z1], axis=-1)
+        from_left = jnp.concatenate([z1, s_flat[..., :-1]], axis=-1)
         from_right = from_right.reshape(s.shape)
         from_left = from_left.reshape(s.shape)
     else:
-        zcol = jnp.zeros((nb, 1), s.dtype)
-        from_right = jnp.concatenate([s[:, 1:], zcol], axis=1)
-        from_left = jnp.concatenate([zcol, s[:, :-1]], axis=1)
+        zcol = jnp.zeros(s.shape[:-1] + (1,), s.dtype)
+        from_right = jnp.concatenate([s[..., 1:], zcol], axis=-1)
+        from_left = jnp.concatenate([zcol, s[..., :-1]], axis=-1)
 
     val1 = jnp.select(
         [w1_sel == isa.W1_S, w1_sel == isa.W1_DIN, w1_sel == isa.W1_RIGHT],
@@ -131,11 +190,11 @@ def _step(chain: bool, state, fields):
 
     we1 = (pred & wp1).astype(jnp.uint8)
     we2 = (pred2 & wp2).astype(jnp.uint8)
-    old1 = jnp.take(mem, dst, axis=1)
-    mem = mem.at[:, dst, :].set(
+    old1 = jnp.take(mem, dst, axis=-2)
+    mem = mem.at[..., dst, :].set(
         jnp.where(we1 == 1, val1.astype(jnp.uint8), old1))
-    old2 = jnp.take(mem, dst2, axis=1)
-    mem = mem.at[:, dst2, :].set(
+    old2 = jnp.take(mem, dst2, axis=-2)
+    mem = mem.at[..., dst2, :].set(
         jnp.where(we2 == 1, val2.astype(jnp.uint8), old2))
 
     return (mem, carry_next.astype(jnp.uint8), mask_next.astype(jnp.uint8)), None
@@ -231,27 +290,15 @@ class ComefaArray:
         self.io_words = 0
 
     # -- hybrid-mode logical port access (512 x 40, column mux 4) ---------
-    @staticmethod
-    def _word_cols(addr: int) -> np.ndarray:
-        phase = addr & (COL_MUX - 1)
-        return np.arange(WORD_BITS) * COL_MUX + phase
-
     def write_word(self, block: int, addr: int, word: int):
         """Memory-mode style write of one 40-bit word (hybrid max-width)."""
-        assert 0 <= addr < N_ROWS * COL_MUX and addr != isa.INSTR_ADDR
-        row, cols = addr >> 2, self._word_cols(addr)
-        bits = (word >> np.arange(WORD_BITS)) & 1
-        self.mem[block, row, cols] = bits.astype(np.uint8)
+        write_port_word(self.mem, block, addr, word)
         self.io_words += 1
 
     def read_word(self, block: int, addr: int) -> int:
-        # mirror write_word's checks: an out-of-range read would otherwise
-        # index garbage rows instead of failing loudly
-        assert 0 <= addr < N_ROWS * COL_MUX and addr != isa.INSTR_ADDR
-        row, cols = addr >> 2, self._word_cols(addr)
-        bits = self.mem[block, row, cols].astype(np.int64)
-        self.io_words += 1
-        return int((bits << np.arange(WORD_BITS)).sum())
+        word = read_port_word(self.mem, block, addr)
+        self.io_words += 1        # a rejected address counts no traffic
+        return word
 
     # -- lane-level helpers (tests / data loading via layout.py) ----------
     def set_lanes(self, rows: Sequence[int], values: np.ndarray,
@@ -294,14 +341,8 @@ class ComefaArray:
         mats = [encoded(p) for p in programs]
         if not mats:
             return []
-        if reset_latches and len(mats) > 1:
-            parts, counts = [mats[0]], [int(mats[0].shape[0])]
-            for m in mats[1:]:
-                parts += [_LATCH_CLEAR_MAT, m]
-                counts.append(int(m.shape[0]) + 1)
-        else:
-            parts, counts = mats, [int(m.shape[0]) for m in mats]
-        self._dispatch(np.concatenate(parts, axis=0))
+        mat, counts = _concat_encoded(mats, reset_latches)
+        self._dispatch(mat)
         return counts
 
     def _dispatch(self, mat: np.ndarray) -> int:

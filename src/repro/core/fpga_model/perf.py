@@ -104,6 +104,22 @@ def _gemv_scheduled_macs_per_lane_cycle(w_bits: int, x_bits: int,
     return k_tile / steady
 
 
+def _gemv_ram_rate(variant: str, achieved: bool = False) -> float:
+    """Aggregate MAC rate of the whole CoMeFa fleet on the GEMV workload."""
+    v = R.VARIANTS[variant]
+    if achieved and v.supports_ooor:
+        per_lane = _gemv_scheduled_macs_per_lane_cycle(8, 8, 27)
+        ram_rate = (R.BRAMS * v.lanes * per_lane * v.freq
+                    / v.logic_cycle_factor)
+    else:
+        cyc = (timing.achieved_mac_cycles(8, 27) if achieved
+               else timing.mac_cycles(8, 27))
+        if v.supports_ooor:
+            cyc = cyc / 2                          # OOOR zero-bit skipping
+        ram_rate = R.BRAMS * v.lanes * v.freq / (cyc * v.logic_cycle_factor)
+    return ram_rate * _eff("gemv", variant)
+
+
 def gemv(variant: str, h: int = 512, t: int = 50,
          achieved: bool = False) -> BenchResult:
     """Work is split between DSP chains and CoMeFa RAMs (Sec. IV-C).
@@ -123,20 +139,39 @@ def gemv(variant: str, h: int = 512, t: int = 50,
     """
     macs = 4 * h * (2 * h) * t                     # LSTM gate GEMVs
     base_rate = dsp_mac_throughput("int8") + lb_mac_throughput("int8")
-    v = R.VARIANTS[variant]
-    if achieved and v.supports_ooor:
-        per_lane = _gemv_scheduled_macs_per_lane_cycle(8, 8, 27)
-        ram_rate = (R.BRAMS * v.lanes * per_lane * v.freq
-                    / v.logic_cycle_factor)
-    else:
-        cyc = (timing.achieved_mac_cycles(8, 27) if achieved
-               else timing.mac_cycles(8, 27))
-        if v.supports_ooor:
-            cyc = cyc / 2                          # OOOR zero-bit skipping
-        ram_rate = R.BRAMS * v.lanes * v.freq / (cyc * v.logic_cycle_factor)
-    ram_rate *= _eff("gemv", variant)
+    ram_rate = _gemv_ram_rate(variant, achieved)
     return BenchResult("gemv", variant, macs / base_rate,
                        macs / (base_rate + ram_rate))
+
+
+def gemv_grid(variant: str, g: int = 8, h: int = 512, t: int = 50,
+              achieved: bool = False) -> BenchResult:
+    """Fleet-level sweep: G independent GEMV instances across the BRAMs.
+
+    Models the `ComefaGrid` scenario at the hardware level.  The fleet's
+    RAMs are split into `g` slices, one problem instance each:
+
+      * *grid* (the augmented side): every slice has its own shared
+        instruction FSM broadcast (Sec. III-D), so all slices compute
+        concurrently and the fleet sustains its full aggregate rate;
+      * *loop* (the baseline side): ONE instruction FSM is time-
+        multiplexed across the slices - only the active instance's
+        slice computes at any time, so the RAM side delivers 1/g of its
+        rate while the DSP/LB base is unaffected.
+
+    The speedup is the fleet-utilisation gain of broadcasting shared
+    FSMs instead of looping one FSM over the slices; it approaches g as
+    the RAM side dominates.  (The *simulator's* grid-vs-loop wall-clock
+    win - one fused grid scan dispatch vs a Python loop of `ComefaArray.run`
+    calls - is measured separately in `benchmarks/sim_speed.py`.)
+    """
+    assert g >= 1
+    macs = g * 4 * h * (2 * h) * t
+    base_rate = dsp_mac_throughput("int8") + lb_mac_throughput("int8")
+    ram_rate = _gemv_ram_rate(variant, achieved)
+    t_loop = macs / (base_rate + ram_rate / g)
+    t_grid = macs / (base_rate + ram_rate)
+    return BenchResult(f"gemv_grid{g}", variant, t_loop, t_grid)
 
 
 # ---------------------------------------------------------------------------
@@ -352,5 +387,10 @@ def run_all(variants=("comefa-d", "comefa-a", "ccb"),
             out[name][var] = fn(var, **kw).speedup
     out["eltwise_nolimit"] = {
         var: eltwise(var, dram_limited=False, achieved=achieved).speedup
+        for var in variants}
+    # fleet-level grid sweep: shared-FSM slices vs one looped FSM (the
+    # ComefaGrid scenario priced at the hardware level)
+    out["gemv_grid8"] = {
+        var: gemv_grid(var, g=8, achieved=achieved).speedup
         for var in variants}
     return out

@@ -23,9 +23,11 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.comefa import ComefaArray, N_COLS, layout, program, schedule
-from ..core.comefa.ir import Program, RowAllocator
-from ..core.comefa.isa import USABLE_ROWS, ceil_log2
+from ..core.comefa import (ComefaArray, ComefaGrid, N_COLS, layout, program,
+                           schedule)
+from ..core.comefa.ir import Operand, Program, RowAllocator
+from ..core.comefa.isa import (Instr, N_ROWS, PRED_MASK, RESERVED_ROWS,
+                               TT_COPY_A, USABLE_ROWS, ceil_log2)
 
 # shape-keyed cache of built + optimized programs (the expensive part is
 # Python-side generation; the engine-matrix encode cache in `block.py`
@@ -268,3 +270,160 @@ def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
                               block=0)[0]
         arr.run(shift)
     return y
+
+
+# ---------------------------------------------------------------------------
+# grid sweeps: G independent problem instances, one shared program stream
+# (ComefaGrid: Sec. III-D shared-FSM broadcast at array-of-arrays scale)
+# ---------------------------------------------------------------------------
+
+def comefa_gemm_batched(a: np.ndarray, b: np.ndarray, *, bits: int,
+                        n_blocks: int = 1, optimized: bool = True,
+                        mesh=None) -> np.ndarray:
+    """C[g] = a[g] @ b[g] for G independent same-shape GEMMs on ONE grid.
+
+    a: [G, m, k], b: [G, k, n] unsigned ints below 2**bits.  Every grid
+    slot owns one problem instance; the `schedule.plan_gemm` tile
+    programs depend only on the shape, so all G slots execute the same
+    instruction stream per tile (one fused grid scan dispatch instead of
+    a Python loop of G `ComefaArray.run` calls) and the per-slot results
+    are bit-identical to G separate `comefa_gemm` calls.  Pass `mesh`
+    to shard the grid axis across devices.
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    assert a.ndim == 3 and b.ndim == 3 and a.shape[0] == b.shape[0]
+    assert a.shape[2] == b.shape[1]
+    G, m, k = a.shape
+    n = b.shape[2]
+    plan = schedule.plan_gemm(m, k, n, bits, n_blocks=n_blocks)
+    lane_plan = plan.lane_plan()
+    grid = ComefaGrid(G, n_blocks=plan.n_blocks, chain=True, mesh=mesh)
+    out = np.empty((G, plan.n_outputs), dtype=np.int64)
+    for tile in plan.tiles():
+        buf = plan.buffers[tile.buffer]
+        for g in range(G):
+            xv, yv = plan.tile_operands(tile, a[g], b[g])
+            slot = grid.slot(g)
+            lane_plan.place(slot, xv, buf.x.base, bits)
+            lane_plan.place(slot, yv, buf.y.base, bits)
+        grid.run(plan.compute_program(tile.buffer, optimized=optimized))
+        heads = plan.head_lanes(tile)
+        for g in range(G):
+            slot = grid.slot(g)
+            vals = np.empty(tile.n_dots, dtype=np.int64)
+            for blk in range(plan.n_blocks):
+                sel = (heads // N_COLS) == blk
+                if sel.any():
+                    vals[sel] = layout.extract(slot, buf.acc.base,
+                                               plan.acc_bits,
+                                               lanes=heads[sel] % N_COLS,
+                                               block=blk)
+            out[g, tile.out_start:tile.out_end] = vals
+    return out.reshape(G, m, n)
+
+
+def gemv_batched_k_tile(w_bits: int, x_bits: int, acc_bits: int) -> int:
+    """Largest chunk fitting double-buffered weights + resident x bits."""
+    return (USABLE_ROWS - acc_bits) // (2 * w_bits + x_bits)
+
+
+def _gemv_batched_layout(plan: schedule.GemvPlan):
+    """Per-chunk activation-bit rows, allocated beside the plan's regions.
+
+    The batched GEMV keeps each slot's streamed activations *resident*
+    (broadcast across all lanes of that slot) instead of encoding them
+    into the instruction stream, so one value-independent program can
+    drive every slot.  Rows come from whatever the `GemvPlan` left free.
+    """
+    used = set(plan.acc)
+    for buf in plan.buffers:
+        used |= set(buf.rows)
+    free = sorted(set(range(N_ROWS)) - set(RESERVED_ROWS) - used)
+    alloc = RowAllocator.from_rows(free)
+    return [alloc.alloc(plan.x_bits, f"x{j}") for j in range(plan.k_tile)]
+
+
+def _gemv_batched_chunk_program(plan: schedule.GemvPlan,
+                                tile: schedule.GemvTile,
+                                x_rows, optimized: bool) -> Program:
+    """Shared (value-independent) accumulate program for one k-chunk.
+
+    For each resident weight j and each activation bit b, the program
+    loads the mask latch from the slot's broadcast x[j] bit-b row, then
+    mask-predicates the `add_into` at offset b - the same predication
+    pattern `program.mul` uses per multiplier bit.  Slots where the bit
+    is 0 retire the adds as no-ops; the cycle count is value-independent
+    (the price of sharing one FSM stream across the grid, vs the per-x
+    OOOR zero-skipping of `comefa_gemv`).
+    """
+    key = ("gemv_batched", plan.w_bits, plan.x_bits, plan.acc_bits,
+           plan.k_tile, tile.n_elems, tile.buffer, tile.index == 0,
+           optimized)
+    if key not in _PROGRAMS:
+        buf = plan.buffers[tile.buffer]
+        prog = Program(name=f"gemv_batched_chunk{tile.index}")
+        if tile.index == 0:
+            prog += program.zero_rows(plan.acc)
+        for j in range(tile.n_elems):
+            w = buf.weight_rows(j, plan.w_bits)
+            for b in range(plan.x_bits):
+                prog.append(Instr(src1_row=x_rows[j][b],
+                                  truth_table=TT_COPY_A, m_en=1, c_rst=1))
+                prog += program.add_into(plan.acc, w, b,
+                                         pred_sel=PRED_MASK)
+        prog = prog.with_live_out(set(plan.acc))
+        if optimized:
+            prog = prog.optimize()
+        _PROGRAMS[key] = (prog, ())
+    return _PROGRAMS[key][0]
+
+
+def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
+                        x_bits: int, acc_bits: int = 32,
+                        optimized: bool = True, mesh=None) -> np.ndarray:
+    """y[g] = w[g].T @ x[g] for G independent GEMVs on ONE grid dispatch.
+
+    w: [G, k, n], x: [G, k] unsigned ints.  Geometry comes from the same
+    `schedule.plan_gemv` double-buffered chunking as `comefa_gemv`, with
+    the k-chunk shrunk so each chunk's activation bits fit as broadcast
+    rows (`gemv_batched_k_tile`): per chunk, every slot loads its own
+    weights AND its own x bits, then all slots execute one shared
+    mask-predicated accumulate program.  Bit-identical per slot to G
+    separate `comefa_gemv` calls.  Pass `mesh` to shard the grid axis.
+    """
+    w = np.asarray(w)
+    x = np.asarray(x)
+    assert w.ndim == 3 and x.ndim == 2 and w.shape[0] == x.shape[0]
+    assert w.shape[1] == x.shape[1]
+    G, k, n = w.shape
+    k_tile = gemv_batched_k_tile(w_bits, x_bits, acc_bits)
+    if k_tile < 1:
+        raise ValueError(
+            f"no room for a double-buffered {w_bits}-bit weight plus "
+            f"{x_bits} broadcast x rows beside a {acc_bits}-bit "
+            f"accumulator ({USABLE_ROWS} usable rows)")
+    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                              k_tile=min(k, k_tile))
+    x_rows = _gemv_batched_layout(plan)
+    nb, lanes = plan.n_blocks, N_COLS
+    pad = nb * lanes - n
+    grid = ComefaGrid(G, n_blocks=nb, mesh=mesh)
+    for tile in plan.tiles():
+        buf = plan.buffers[tile.buffer]
+        for g in range(G):
+            slot = grid.slot(g)
+            for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
+                wj = np.pad(w[g, j], (0, pad)).reshape(nb, lanes)
+                rows = buf.weight_rows(j_local, w_bits)
+                layout.place(slot, wj, rows.base, w_bits)
+                assert 0 <= int(x[g, j]) < (1 << x_bits)
+                layout.place(slot, np.full(lanes, int(x[g, j])),
+                             x_rows[j_local].base, x_bits)
+        grid.run(_gemv_batched_chunk_program(plan, tile, x_rows,
+                                             optimized=optimized))
+    out = np.empty((G, n), dtype=np.int64)
+    for g in range(G):
+        vals = layout.extract(grid.slot(g), plan.acc.base, acc_bits)
+        out[g] = vals.reshape(-1)[:n]
+    return out

@@ -43,6 +43,7 @@ DEFAULT_RULES: Rules = {
     "conv": None,
     "bits": None,                 # bit-plane dim of packed weights
     "packed_in": None,            # packed (K/32) dim: replicate with kv...
+    "grid": ("pod", "data"),      # ComefaGrid slot axis: independent sweeps
 }
 
 
@@ -66,10 +67,17 @@ def set_active_rules(rules: Optional[Rules]) -> None:
 
 
 def spec_for(logical_axes: Sequence[Optional[str]],
-             rules: Optional[Rules] = None) -> P:
-    """Logical names (one per dim, None = replicated) -> PartitionSpec."""
+             rules: Optional[Rules] = None,
+             mesh_axes: Optional[Sequence[str]] = None) -> P:
+    """Logical names (one per dim, None = replicated) -> PartitionSpec.
+
+    `mesh_axes` restricts the rule resolution to an explicit mesh's axis
+    names (e.g. a caller-built 1-D sweep mesh) without touching the
+    module-global default installed by `set_mesh_axes`.
+    """
     rules = dict(DEFAULT_RULES, **(rules if rules is not None
                                    else (_ACTIVE_RULES or {})))
+    active = tuple(mesh_axes) if mesh_axes is not None else _ACTIVE_AXES
     parts = []
     used: set = set()
     for name in logical_axes:
@@ -82,7 +90,7 @@ def spec_for(logical_axes: Sequence[Optional[str]],
         else:
             # a mesh axis may appear only once in a spec, and must exist
             ax = tuple(a for a in axes
-                       if a not in used and a in _ACTIVE_AXES)
+                       if a not in used and a in active)
             used.update(ax)
             parts.append(ax if len(ax) > 1 else (ax[0] if ax else None))
     return P(*parts)

@@ -1,0 +1,178 @@
+"""Deterministic fallback for the `hypothesis` API surface this suite uses.
+
+The property suites (`test_properties.py`, `test_kernels.py`,
+`test_grid.py`, `test_schedule_props.py`) prefer real hypothesis - CI
+installs it from requirements-dev.txt and gets shrinking, the example
+database, and adaptive generation.  Environments without it (the baked
+container image has no pip access) used to skip those modules wholesale;
+this shim keeps them *running* there by replaying each `@given` test over
+a fixed number of seeded pseudo-random samples plus every explicit
+`@example`.
+
+Scope: exactly the subset the tests import - `given`, `settings`,
+`example`, `assume`, and `strategies.{integers, booleans, just,
+sampled_from, lists, tuples}`.  Draws are deterministic per test (seeded
+from the test's qualified name), so failures reproduce; there is no
+shrinking, which is the price of the fallback.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by `assume(False)`: discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class _Strategy:
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def __repr__(self):
+        return f"_Strategy({self._label})"
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (import as ``st``)."""
+
+    @staticmethod
+    def integers(min_value=None, max_value=None) -> _Strategy:
+        lo = -(1 << 16) if min_value is None else int(min_value)
+        hi = (1 << 16) if max_value is None else int(max_value)
+
+        def draw(rnd):
+            # mix uniform draws with the boundary values hypothesis is
+            # fond of - edge cases are where the bugs live
+            r = rnd.random()
+            if r < 0.1:
+                return lo
+            if r < 0.2:
+                return hi
+            return rnd.randint(lo, hi)
+
+        return _Strategy(draw, f"integers({lo}, {hi})")
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rnd: rnd.random() < 0.5, "booleans")
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rnd: value, f"just({value!r})")
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        assert elements
+        return _Strategy(lambda rnd: rnd.choice(elements), "sampled_from")
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size=None) -> _Strategy:
+        hi = min_size + 10 if max_size is None else max_size
+
+        def draw(rnd):
+            size = rnd.randint(min_size, hi)
+            return [elements.draw(rnd) for _ in range(size)]
+
+        return _Strategy(draw, f"lists[{min_size}..{hi}]")
+
+    @staticmethod
+    def tuples(*parts: _Strategy) -> _Strategy:
+        return _Strategy(lambda rnd: tuple(p.draw(rnd) for p in parts),
+                         "tuples")
+
+
+st = strategies
+
+
+# ---------------------------------------------------------------------------
+# decorators
+# ---------------------------------------------------------------------------
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Attach run settings; only ``max_examples`` matters to the shim."""
+
+    def deco(fn):
+        fn._mh_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def example(**kwargs):
+    """Queue an explicit example (always run before the random samples)."""
+
+    def deco(fn):
+        fn._mh_examples = [kwargs] + list(getattr(fn, "_mh_examples", []))
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Replay the test over explicit examples + seeded random draws.
+
+    The wrapper takes no parameters, so pytest never mistakes the
+    strategy names for fixtures; decorator order relative to
+    `@settings` / `@example` doesn't matter (attributes are read off
+    both the wrapper and the wrapped function at call time).
+    """
+    assert strats, "given() requires keyword strategies"
+
+    def deco(fn):
+        def wrapper():
+            conf = (getattr(wrapper, "_mh_settings", None)
+                    or getattr(fn, "_mh_settings", None)
+                    or {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            explicit = (list(getattr(wrapper, "_mh_examples", []))
+                        + list(getattr(fn, "_mh_examples", [])))
+            for kwargs in explicit:
+                fn(**kwargs)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}"
+                              .encode())
+            rnd = random.Random(seed)
+            done = tries = 0
+            budget = conf["max_examples"]
+            while done < budget and tries < 10 * budget:
+                tries += 1
+                kwargs = {k: s.draw(rnd) for k, s in strats.items()}
+                try:
+                    fn(**kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                done += 1
+            if done == 0 and not explicit:
+                # mirror hypothesis' unsatisfied-assumption health check:
+                # a property that never executed must not pass green
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume() rejected all {tries} "
+                    f"generated examples - property asserted nothing")
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco

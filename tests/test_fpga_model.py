@@ -57,6 +57,32 @@ def test_fig9_eltwise_is_dram_bound():
 
 
 # ---------------------------------------------------------------------------
+# fleet-level grid sweep: shared-FSM slices vs one looped FSM
+# ---------------------------------------------------------------------------
+
+def test_gemv_grid_fleet_utilisation():
+    """Grid-vs-loop speedup is 1 at g=1, grows monotonically with g, and
+    never exceeds g (the loop still has the DSP base running)."""
+    assert abs(perf.gemv_grid("comefa-d", g=1).speedup - 1.0) < 1e-9
+    prev = 1.0
+    for g in (2, 8, 64):
+        s = perf.gemv_grid("comefa-d", g=g).speedup
+        assert 1.0 < s <= g
+        assert s > prev
+        prev = s
+    # the RAM side is a large share of the GEMV rate, so broadcasting
+    # shared FSMs instead of looping one is a real fleet-level win
+    assert perf.gemv_grid("comefa-d", g=8).speedup > 1.5
+
+
+def test_run_all_includes_grid_sweep_row():
+    res = perf.run_all()
+    assert "gemv_grid8" in res
+    for var in ("comefa-d", "comefa-a", "ccb"):
+        assert res["gemv_grid8"][var] >= 1.0
+
+
+# ---------------------------------------------------------------------------
 # Fig 11: co-mapping sweep has an interior sweet spot
 # ---------------------------------------------------------------------------
 

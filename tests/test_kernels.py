@@ -5,9 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # no hypothesis in this environment (the container image has no pip):
+    # fall back to the deterministic seeded sampler so this module RUNS
+    # instead of perpetually skipping (see tests/_minihyp.py)
+    from _minihyp import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.quant import bitplane as bp

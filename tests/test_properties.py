@@ -2,9 +2,13 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="hypothesis not installed "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import example, given, settings, strategies as st
+try:
+    from hypothesis import example, given, settings, strategies as st
+except ImportError:
+    # no hypothesis in this environment (the container image has no pip):
+    # fall back to the deterministic seeded sampler so this module RUNS
+    # instead of perpetually skipping (see tests/_minihyp.py)
+    from _minihyp import example, given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,176 @@
+"""Property tests for the GEMM/GEMV planners and the LCU `Schedule`.
+
+`tests/test_schedule.py` covers these invariants example-by-example;
+this module pins them on *ragged random shapes*:
+
+  * `plan_gemm`: lane groups are powers of two covering k, row regions
+    (both double-buffer slots + shared scratch) never overlap or touch
+    the reserved rows, tiles partition the output range exactly;
+  * `plan_gemv`: chunk tiles partition [0, k), buffers alternate and
+    stay disjoint from the accumulator, only the final tile unloads;
+  * `Schedule`: for arbitrary per-tile phase costs, the pipelined
+    makespan is bounded by serial-sum above and by every engine's busy
+    time / every tile's own phase chain below, and each engine runs one
+    tile at a time in order with the buffer-reuse lag respected.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ImportError:
+    # no hypothesis in this environment (the container image has no pip):
+    # fall back to the deterministic seeded sampler (tests/_minihyp.py)
+    from _minihyp import assume, given, settings, strategies as st
+
+from repro.core.comefa.isa import RESERVED_ROWS, USABLE_ROWS
+from repro.core.comefa.schedule import (Schedule, plan_gemm, plan_gemv)
+
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# plan_gemm invariants on ragged shapes
+# ---------------------------------------------------------------------------
+
+def _gemm_regions(plan):
+    regions = []
+    for buf in plan.buffers:
+        regions += [set(buf.x), set(buf.y), set(buf.acc)]
+    regions.append(set(plan.scratch))
+    return regions
+
+
+@given(m=st.integers(1, 7), k=st.integers(1, 48), n=st.integers(1, 9),
+       bits=st.integers(1, 5), n_blocks=st.sampled_from([1, 2, 4]))
+@settings(max_examples=60, deadline=None)
+def test_plan_gemm_invariants_on_ragged_shapes(m, k, n, bits, n_blocks):
+    try:
+        plan = plan_gemm(m, k, n, bits, n_blocks=n_blocks)
+    except ValueError:
+        assume(False)      # shape legitimately doesn't fit - discard
+    # every lane group is a power of two covering k
+    assert plan.group == 1 << plan.steps
+    assert plan.group & (plan.group - 1) == 0
+    assert k <= plan.group <= plan.lane_span
+    # row regions: pairwise disjoint, inside the block, off reserved rows
+    regions = _gemm_regions(plan)
+    for i, a in enumerate(regions):
+        assert not (a & set(RESERVED_ROWS))
+        assert all(0 <= r < USABLE_ROWS + len(RESERVED_ROWS) for r in a)
+        for b in regions[i + 1:]:
+            assert not (a & b), "row regions overlap"
+    # tiles partition [0, m*n) contiguously, alternating buffers
+    tiles = plan.tiles()
+    assert tiles[0].out_start == 0 and tiles[-1].out_end == plan.n_outputs
+    for t, tile in enumerate(tiles):
+        assert tile.buffer == t % 2
+        assert tile.n_dots >= 1
+        if t:
+            assert tile.out_start == tiles[t - 1].out_end
+        heads = plan.head_lanes(tile)
+        assert len(set(heads.tolist())) == tile.n_dots
+        assert heads.max(initial=0) < plan.lane_span
+
+
+@given(k=st.integers(1, 200), n=st.integers(1, 400),
+       w_bits=st.integers(1, 8), x_bits=st.integers(1, 8),
+       acc_bits=st.sampled_from([16, 24, 32]))
+@settings(max_examples=60, deadline=None)
+def test_plan_gemv_invariants_on_ragged_shapes(k, n, w_bits, x_bits,
+                                               acc_bits):
+    try:
+        plan = plan_gemv(k, n, w_bits, x_bits, acc_bits)
+    except ValueError:
+        assume(False)
+    # chunk tiles partition [0, k) contiguously, alternating buffers
+    tiles = plan.tiles()
+    assert tiles[0].k_start == 0 and tiles[-1].k_end == k
+    for t, tile in enumerate(tiles):
+        assert tile.buffer == t % 2
+        assert 1 <= tile.n_elems <= plan.k_tile
+        if t:
+            assert tile.k_start == tiles[t - 1].k_end
+        # only the last chunk pays an unload (shared accumulator)
+        assert (plan.unload_cycles(tile) > 0) == (t == len(tiles) - 1)
+        assert plan.load_cycles(tile) > 0
+    # weight buffers disjoint from each other and from the accumulator
+    b0, b1, acc = (set(plan.buffers[0].rows), set(plan.buffers[1].rows),
+                   set(plan.acc))
+    assert not (b0 & b1) and not (b0 & acc) and not (b1 & acc)
+    for region in (b0, b1, acc):
+        assert not (region & set(RESERVED_ROWS))
+
+
+@given(k=st.sampled_from([5, 37, 100]), x_bits=st.sampled_from([1, 4, 8]),
+       seed=SEEDS)
+@settings(max_examples=10, deadline=None)
+def test_plan_gemv_schedule_bounds_random_x(k, x_bits, seed):
+    rng = np.random.default_rng(seed)
+    plan = plan_gemv(k, 60, 4, x_bits, 24)
+    x = rng.integers(0, 1 << x_bits, size=k)
+    sched = plan.schedule(x, optimized=False)
+    assert sched.n_tiles == plan.n_tiles
+    assert sched.total_cycles <= sched.serial_cycles
+    assert sched.total_cycles >= max(
+        sum(c[i] for c in sched.tile_costs) for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# the pipelined Schedule on arbitrary phase costs
+# ---------------------------------------------------------------------------
+
+COSTS = st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30),
+                           st.integers(0, 30)), min_size=0, max_size=7)
+
+
+@given(costs=COSTS)
+@settings(max_examples=80, deadline=None)
+def test_schedule_pipeline_bounds(costs):
+    sched = Schedule(costs)
+    total, serial = sched.total_cycles, sched.serial_cycles
+    # pipelined never beats physics: each engine must still run every
+    # tile, and each tile's own three phases are sequential
+    assert total <= serial
+    for i in range(3):
+        assert total >= sum(c[i] for c in costs)
+    for c in costs:
+        assert total >= sum(c)
+    if costs:
+        assert sched.steady_state_cycles == max(max(c) for c in costs)
+        assert sched.serial_tile_cycles == max(sum(c) for c in costs)
+
+
+@given(costs=COSTS)
+@settings(max_examples=80, deadline=None)
+def test_schedule_timeline_engine_and_lag_constraints(costs):
+    sched = Schedule(costs)
+    spans = sched.timeline()
+    by_kind = {"load": [], "compute": [], "unload": []}
+    by_tile = {}
+    for s in spans:
+        assert 0 <= s.start <= s.end
+        assert s.cycles == sched.tile_costs[s.tile][
+            ("load", "compute", "unload").index(s.kind)]
+        by_kind[s.kind].append(s)
+        by_tile.setdefault(s.tile, {})[s.kind] = s
+    # each engine serialises its tiles in order
+    for seq in by_kind.values():
+        for a, b in zip(seq, seq[1:]):
+            assert a.tile < b.tile and a.end <= b.start
+    lag = sched.n_buffers
+    for t, phases in by_tile.items():
+        # phase order within a tile
+        assert phases["load"].end <= phases["compute"].start
+        assert phases["compute"].end <= phases["unload"].start
+        # buffer-reuse lag: tile t's load waits on t-lag's compute, its
+        # compute on t-lag's unload
+        if t >= lag:
+            assert phases["load"].start >= by_tile[t - lag]["compute"].end
+            assert (phases["compute"].start
+                    >= by_tile[t - lag]["unload"].end)
+
+
+def test_schedule_rejects_malformed_costs():
+    with pytest.raises(AssertionError):
+        Schedule([(1, 2)])
