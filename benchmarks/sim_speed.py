@@ -152,6 +152,48 @@ def run(rows: list) -> None:
     us_red = _bench(lambda: red_arr.run(red_prog), reps=3)
     rows.append(("sim/chain_reduce_nb2_us", us_red, us_red, None))
 
+    # streamed-operand recoding: GEMV chunk compute cycles under naive /
+    # Booth / NAF digit streams (ir.specialize_streams over the same
+    # symbolic GemvPlan template), on two activation profiles - uniform
+    # random bits (NAF's ~n/3-vs-n/2 density win) and runs-of-ones
+    # (thermometer-coded, Booth's sweet spot)
+    from repro.core.comefa import ir as cir, plan_gemv
+    gk, gwb, gxb, gaccb = 25, 8, 8, 27
+    x_rand = [int(v) for v in rng.integers(0, 1 << gxb, size=gk)]
+    x_runs = [0b01111110] * gk
+    for xname, xs in (("rand", x_rand), ("runs", x_runs)):
+        for rc in ("naive", "booth", "naf"):
+            plan = plan_gemv(gk, 160, gwb, gxb, gaccb, k_tile=5,
+                             reserve_neg=cir.recode_is_signed(rc))
+            sched = plan.schedule(xs, optimized=True, recode=rc)
+            compute = sum(c[1] for c in sched.tile_costs)
+            rows.append((f"sim/gemv_recode_{xname}_{rc}_cycles",
+                         0.0, compute, None))
+
+    # grid-batched GEMV: shared mask-predicated broadcast program (the
+    # value-independent PR-4 trade) vs per-slot stream specialization
+    # (run_per_slot: each slice's FSM streams its own recoded digits) -
+    # modelled compute cycles per slot, sparse-bit activations
+    from repro.kernels import comefa_sim as _cs
+    bg, bk, bn, bwb, bxb, baccb = 4, 12, 160, 4, 6, 20
+    bw = rng.integers(0, 1 << bwb, size=(bg, bk, bn))
+    bx = (1 << rng.integers(0, bxb, size=(bg, bk))).astype(np.int64)
+
+    def _batched_cycles(recode):
+        stats = {}
+        _cs.comefa_gemv_batched(bw, bx, w_bits=bwb, x_bits=bxb,
+                                acc_bits=baccb, recode=recode, stats=stats)
+        return stats["cycles"]
+
+    cyc_mask = _batched_cycles(None)
+    rows.append(("sim/gemv_batched_mask_cycles", 0.0, cyc_mask, None))
+    for rc in ("naive", "naf"):
+        cyc_ps = _batched_cycles(rc)
+        rows.append((f"sim/gemv_batched_perslot_{rc}_cycles",
+                     0.0, cyc_ps, None))
+        rows.append((f"sim/gemv_batched_perslot_{rc}_cycle_speedup",
+                     0.0, cyc_mask / cyc_ps, None))
+
     # FIR steady-state per-sample cycles (taps resident across the chain,
     # samples streamed OOOR) vs the generic-MAC closed form
     rows.append(("sim/fir_per_sample_cycles_coissue", 0.0,

@@ -3,7 +3,8 @@ tiled LCU scheduling, timing."""
 from . import grid, ir, isa, layout, program, schedule, timing
 from .block import ComefaArray, ROW_ONES, ROW_ZEROS
 from .grid import ComefaGrid, grid_mesh, grid_shardings
-from .ir import Operand, Program, RowAllocator
+from .ir import (Operand, Program, RowAllocator, StreamedOperand,
+                 specialize_streams)
 from .isa import Instr, N_COLS, N_ROWS, USABLE_ROWS, WORD_BITS
 from .layout import ChainPlan, plan_chain
 from .program import ProgramBuilder
@@ -13,6 +14,7 @@ __all__ = [
     "grid", "ir", "isa", "layout", "program", "schedule", "timing",
     "ComefaArray", "ComefaGrid", "grid_mesh", "grid_shardings",
     "Instr", "Program", "ProgramBuilder", "RowAllocator", "Operand",
+    "StreamedOperand", "specialize_streams",
     "ChainPlan", "plan_chain", "GemmPlan", "GemvPlan", "Schedule",
     "plan_gemm", "plan_gemv", "N_COLS", "N_ROWS", "USABLE_ROWS",
     "WORD_BITS", "ROW_ONES", "ROW_ZEROS",

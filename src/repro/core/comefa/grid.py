@@ -32,13 +32,14 @@ chained) block row.
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import block
+from . import block, isa
 from .block import (ComefaArray, encoded, read_port_word, write_port_word)
 from .isa import N_COLS, N_ROWS, ROW_ONES
 
@@ -51,6 +52,34 @@ from .isa import N_COLS, N_ROWS, ROW_ONES
 # elementwise dimension to XLA (no vmap batching rules), and chain=True
 # shift seams stay inside each slot by construction.
 _run_grid = block._run
+
+
+@functools.partial(jax.jit, static_argnames=("chain",))
+def _run_slotwise(mem, carry, mask, progs, chain: bool):
+    """Per-slot program dispatch: slot g scans its OWN ``progs[g]``.
+
+    Models one instruction FSM *per grid slice* instead of the shared
+    broadcast - the configuration `run_per_slot` exposes so
+    value-dependent (stream-specialized) programs can differ per slot.
+    The grid axis must be vmapped here (instruction fields differ across
+    slots, so it is no longer an elementwise dimension); the batched
+    gather/scatter rules make this dispatch slower than the fused shared
+    path - the price of per-slot digit streams, paid in simulator
+    wall-clock while the modelled hardware *saves* cycles (zero-skipping
+    returns).
+    """
+    def one(m, c, k, p):
+        (m, c, k), _ = jax.lax.scan(
+            functools.partial(block._step, chain), (m, c, k), p)
+        return m, c, k
+
+    return jax.vmap(one)(mem, carry, mask, progs)
+
+
+# per-slot program matrices are padded up to a multiple of this quantum so
+# the number of distinct scan lengths (= jit retraces) stays bounded across
+# a sweep of value-dependent program lengths
+_SLOT_PAD_QUANTUM = 32
 
 
 class _Slot:
@@ -197,23 +226,68 @@ class ComefaGrid:
         self._dispatch(mat)
         return counts
 
-    def _dispatch(self, mat: np.ndarray) -> int:
-        if mat.shape[0] == 0:
-            return 0
+    def run_per_slot(self, programs: Sequence) -> List[int]:
+        """Execute a DIFFERENT program on every slot, in one dispatch.
+
+        `programs[g]` runs on slot g - the per-slice-FSM configuration:
+        each slice of the fleet streams its own operand digits (the
+        per-slot stream specialization of `ir.specialize_streams`),
+        instead of every slice executing one broadcast stream.  Shorter
+        programs pad with no-op cycles (all control fields idle) up to
+        the longest slot, so slots stay independent and bit-identical to
+        isolated `ComefaArray.run` calls; padding is simulator bookkeeping
+        only - `cycles` advances by the *longest real* program (the
+        dispatch makespan: slices run concurrently, the slowest bounds
+        the wall-clock) and the returned list gives every slot's own
+        cycle count.
+        """
+        assert len(programs) == self.g, (len(programs), self.g)
+        mats = [encoded(p) for p in programs]
+        counts = [int(m.shape[0]) for m in mats]
+        longest = max(counts, default=0)
+        if longest == 0:
+            return counts
+        # bucketed padding bounds the number of distinct scan lengths a
+        # sweep of value-dependent programs can trigger (each length is
+        # one jit trace)
+        t_pad = -(-longest // _SLOT_PAD_QUANTUM) * _SLOT_PAD_QUANTUM
+        stack = np.zeros((self.g, t_pad, isa.N_ENGINE_FIELDS),
+                         dtype=np.int32)   # zero fields == idle cycle
+        for g, m in enumerate(mats):
+            stack[g, :m.shape[0]] = m
+        self._store_state(*_run_slotwise(*self._device_args(stack),
+                                         self.chain))
+        self.cycles += longest
+        return counts
+
+    def _device_args(self, prog: np.ndarray) -> Tuple:
+        """State + program as device arrays (sharded when a mesh is set).
+
+        The program sharding spec is fully-replicated (rank-agnostic), so
+        the same marshalling serves the shared [T, F] matrix and the
+        per-slot [G, T, F] stack.
+        """
         args = (jnp.asarray(self.mem), jnp.asarray(self.carry),
-                jnp.asarray(self.mask), jnp.asarray(mat))
+                jnp.asarray(self.mask), jnp.asarray(prog))
         if self._shardings is not None:
             s_mem, s_latch, s_prog = self._shardings
             args = (jax.device_put(args[0], s_mem),
                     jax.device_put(args[1], s_latch),
                     jax.device_put(args[2], s_latch),
                     jax.device_put(args[3], s_prog))
-        mem, carry, mask = _run_grid(*args, self.chain)
+        return args
+
+    def _store_state(self, mem, carry, mask) -> None:
         # np.array (not asarray): jax returns read-only device views, and
         # callers interleave per-slot placements with runs (sweep loops)
         self.mem = np.array(mem)
         self.carry = np.array(carry)
         self.mask = np.array(mask)
+
+    def _dispatch(self, mat: np.ndarray) -> int:
+        if mat.shape[0] == 0:
+            return 0
+        self._store_state(*_run_grid(*self._device_args(mat), self.chain))
         self.cycles += int(mat.shape[0])
         return int(mat.shape[0])
 

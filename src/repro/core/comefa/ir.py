@@ -13,6 +13,14 @@ than flat instruction lists:
   * `RowAllocator` / `Operand`
                  - a register-file allocator for row operands, replacing the
                    hand-threaded `Rows` index lists of the seed code.
+  * `StreamedOperand` / `StreamMac` / `StreamExt`
+                 - *symbolic* outside operands (Sec. III-I OOOR): a program
+                   can be emitted unspecialized, with placeholder slots
+                   standing for "stream this yet-unknown value bit-serially";
+                   `specialize_streams` later substitutes concrete values,
+                   recoding them into naive / Booth / NAF digit streams and
+                   eliminating dead (zero) digits - the paper's FSM
+                   zero-bit skipping lifted into a compiler pass.
   * passes       - `fold_constant_rows` (Sec. III-B: the reserved all-ones /
                    all-zeros rows plus in-program constant tracking),
                    `eliminate_dead_writes` (scratch writes never observed at
@@ -232,6 +240,160 @@ class RowAllocator:
 
 
 # ---------------------------------------------------------------------------
+# streamed operands (Sec. III-I OOOR, as first-class IR)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamedOperand:
+    """A symbolic outside operand: value streamed by the FSM, not stored.
+
+    The OOOR mechanism (Sec. III-I) lets the instruction-generation FSM
+    inspect an operand that never enters the array and emit only the
+    instructions its nonzero digits require.  Generators emit programs
+    *unspecialized* against one of these; `specialize_streams` substitutes
+    the concrete value per invocation (recoded into the chosen digit set).
+
+    `index` names the position of the concrete value in the sequence
+    handed to `specialize_streams`; `digit_set` declares what the
+    consuming slots can execute - ``"binary"`` ({0, 1}: substitution and
+    zero-skipping only) or ``"signed"`` ({-1, 0, +1}: Booth/NAF recoding,
+    which needs a complement scratch region at the consuming `StreamMac`).
+    """
+    index: int
+    n_bits: int
+    name: str = "x"
+    digit_set: str = "signed"
+
+    def __post_init__(self):
+        assert self.index >= 0 and self.n_bits >= 1
+        assert self.digit_set in ("binary", "signed"), self.digit_set
+
+
+class StreamSlot:
+    """Marker base for symbolic slots awaiting stream specialization."""
+    __slots__ = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamMac(StreamSlot):
+    """Symbolic ``acc += weight * stream``: one digit-serial MAC.
+
+    Expands, per nonzero digit d of the recoded stream value at offset
+    ``off``, into an accumulator-segment add (d = +1) or a
+    complement-add with preset carry plus sign extension (d = -1, which
+    requires the ``neg`` scratch rows).  Zero digits expand to nothing -
+    the dead-digit elimination that used to live inside `ooor_dot`.
+    """
+    stream: StreamedOperand
+    weight: Tuple[int, ...]
+    acc: Tuple[int, ...]
+    neg: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "weight", tuple(self.weight))
+        object.__setattr__(self, "acc", tuple(self.acc))
+        if self.neg is not None:
+            object.__setattr__(self, "neg", tuple(self.neg))
+            assert len(self.neg) >= len(self.weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamExt(StreamSlot):
+    """Symbolic OOOR instruction: `instr` with ``ext_bit`` = stream bit.
+
+    The template must already read its B operand from the broadcast path
+    (``b_ext=1``); specialization substitutes bit ``bit`` of the stream's
+    concrete value.  This is the streamed form of the `logic_ext` /
+    `add_ext` OOOR generators (eltwise against an outside operand,
+    add-a-constant) - one cycle per row either way, but the value no
+    longer needs to be known at emission time.
+    """
+    instr: Instr
+    stream: StreamedOperand
+    bit: int
+
+    def __post_init__(self):
+        assert self.instr.b_ext == 1, "StreamExt template must set b_ext"
+        assert 0 <= self.bit < self.stream.n_bits
+
+
+# -- digit recoders ---------------------------------------------------------
+
+def naive_digits(x: int, n_bits: int) -> List[int]:
+    """Plain binary digits of x, LSB first ({0, 1} - popcount schedule)."""
+    assert 0 <= x < (1 << n_bits)
+    return [(x >> i) & 1 for i in range(n_bits)]
+
+
+def booth_radix2_digits(x: int, n_bits: int) -> List[int]:
+    """Classic radix-2 Booth recoding: d_i = x_{i-1} - x_i (x_{-1} = 0).
+
+    Digits in {-1, 0, +1}; nonzero exactly at run boundaries, so long
+    runs of ones collapse to two digits - but a uniformly random operand
+    averages ~(n+1)/2 boundaries, *denser* than binary's n/2.  NAF
+    (`naf_digits`) dominates it on average; this recoder exists because
+    the paper names Booth explicitly and run-heavy streams (thermometer
+    codes, saturated activations) are its sweet spot.
+    """
+    assert 0 <= x < (1 << n_bits)
+    digits = []
+    prev = 0
+    for i in range(n_bits):
+        cur = (x >> i) & 1
+        digits.append(prev - cur)
+        prev = cur
+    digits.append(prev)                    # d_n = x_{n-1}
+    while digits and digits[-1] == 0:
+        digits.pop()
+    return digits
+
+
+def naf_digits(x: int) -> List[int]:
+    """Canonical (non-adjacent form) signed-digit recoding of x.
+
+    Minimal Hamming weight among {-1, 0, +1} representations: never
+    denser than binary, ~n/3 expected nonzero digits vs binary's n/2
+    for a uniform n-bit operand.  (`program.booth_digits` is the legacy
+    alias.)
+    """
+    digits = []
+    while x:
+        if x & 1:
+            d = 2 - (x & 3)              # +1 if x%4==1, -1 if x%4==3
+            x -= d
+        else:
+            d = 0
+        digits.append(d)
+        x >>= 1
+    return digits
+
+
+RECODERS = {
+    "naive": naive_digits,
+    "booth": booth_radix2_digits,
+    "naf": lambda x, n_bits: naf_digits(x),
+}
+# modes whose digit alphabet includes -1 (need a complement scratch region)
+SIGNED_RECODES = frozenset({"booth", "naf"})
+
+
+def recode_is_signed(recode) -> bool:
+    """Whether a recode mode can emit negative digits (callable: assume yes)."""
+    return recode in SIGNED_RECODES or callable(recode)
+
+
+def recode_digits(x: int, n_bits: int, recode: str = "naive") -> List[int]:
+    """Digit stream for x under a recoding mode (or a callable recoder)."""
+    fn = RECODERS.get(recode, recode)
+    if not callable(fn):
+        raise ValueError(f"unknown recode mode {recode!r} "
+                         f"(have {sorted(RECODERS)})")
+    digits = fn(x, n_bits)
+    assert sum(d << i for i, d in enumerate(digits)) == x
+    return digits
+
+
+# ---------------------------------------------------------------------------
 # the Program IR container
 # ---------------------------------------------------------------------------
 
@@ -243,6 +405,12 @@ class Program:
     list of *slots*: after `optimize()` a slot may hold two instructions
     that retire in one cycle via the dual write ports.  `len(p)` and
     `p.cycles` count slots, i.e. processing cycles.
+
+    A slot may also be a *symbolic* `StreamSlot` (`StreamMac` /
+    `StreamExt`): such a program is a template over outside operands and
+    cannot be encoded, cycle-counted, or optimized until
+    `specialize_streams` substitutes concrete values - the cycle count
+    genuinely depends on the streamed digits.
     """
 
     __slots__ = ("_slots", "name", "live_out", "_encoded", "_key")
@@ -269,6 +437,12 @@ class Program:
 
     def append(self, instr: Instr) -> None:
         self._slots.append((instr,))
+        self._dirty()
+
+    def append_stream(self, slot: "StreamSlot") -> None:
+        """Append a symbolic streamed-operand slot (program turns symbolic)."""
+        assert isinstance(slot, StreamSlot)
+        self._slots.append(slot)
         self._dirty()
 
     def extend(self, instrs: Iterable[Instr]) -> None:
@@ -298,7 +472,29 @@ class Program:
         return len(self._slots)
 
     @property
+    def is_symbolic(self) -> bool:
+        """True when any slot is a streamed-operand placeholder."""
+        return any(isinstance(s, StreamSlot) for s in self._slots)
+
+    def streams(self) -> Tuple[StreamedOperand, ...]:
+        """Distinct streamed operands referenced, ordered by index."""
+        seen = {}
+        for s in self._slots:
+            if isinstance(s, StreamSlot):
+                seen.setdefault(s.stream.index, s.stream)
+        return tuple(seen[i] for i in sorted(seen))
+
+    def _concrete(self, what: str) -> None:
+        if self.is_symbolic:
+            raise ValueError(
+                f"cannot {what} a symbolic program ({self.name!r} still "
+                f"references streamed operands "
+                f"{[s.name for s in self.streams()]}); run "
+                f"ir.specialize_streams(program, values) first")
+
+    @property
     def cycles(self) -> int:
+        self._concrete("cycle-count")
         return len(self._slots)
 
     @property
@@ -307,6 +503,7 @@ class Program:
 
     def instrs(self) -> List[Instr]:
         """Flattened instruction list in original program order."""
+        self._concrete("flatten")
         return [i for slot in self._slots for i in slot]
 
     def __iter__(self):
@@ -314,11 +511,13 @@ class Program:
 
     @property
     def n_instrs(self) -> int:
+        self._concrete("count instructions of")
         return sum(len(s) for s in self._slots)
 
     @property
     def is_fused(self) -> bool:
-        return any(len(s) > 1 for s in self._slots)
+        return any(not isinstance(s, StreamSlot) and len(s) > 1
+                   for s in self._slots)
 
     def with_live_out(self, rows: Iterable[int]) -> "Program":
         """Same program, annotated with the rows observed after it runs."""
@@ -327,6 +526,11 @@ class Program:
         return p
 
     def __repr__(self):
+        if self.is_symbolic:
+            n_sym = sum(1 for s in self._slots if isinstance(s, StreamSlot))
+            return (f"Program({self.name!r}: symbolic, {len(self._slots)} "
+                    f"slots of which {n_sym} streamed, "
+                    f"{len(self.streams())} streams)")
         fused = sum(1 for s in self._slots if len(s) > 1)
         return (f"Program({self.name!r}: {self.n_instrs} instrs in "
                 f"{self.cycles} cycles, {fused} co-issued)")
@@ -341,6 +545,7 @@ class Program:
 
     def encode(self) -> np.ndarray:
         """Engine field matrix [cycles, N_ENGINE_FIELDS] (cached)."""
+        self._concrete("encode")
         if self._encoded is None:
             if not self._slots:
                 self._encoded = np.zeros((0, isa.N_ENGINE_FIELDS), np.int32)
@@ -357,6 +562,7 @@ class Program:
         Default pipeline: constant-row folding -> dead-write elimination
         (needs a live-out annotation to do anything) -> dual-port co-issue.
         """
+        self._concrete("optimize")
         lo = frozenset(live_out) if live_out is not None else self.live_out
         if self.is_fused:
             # already scheduled: the default pipeline operates on unfused
@@ -409,6 +615,111 @@ def concat_programs(programs: Sequence, name: str = "batch",
         # unannotated constituent forces the conservative "all rows live"
         out.live_out = frozenset(live)
     return out
+
+
+# ---------------------------------------------------------------------------
+# pass: streamed-operand specialization (Booth/NAF recoding + dead digits)
+# ---------------------------------------------------------------------------
+
+def _expand_stream_mac(slot: StreamMac, value: int, recode: str,
+                       out: List[Slot]) -> None:
+    """Concrete instruction slots for one digit-serial MAC.
+
+    Expansion contract (pinned bit-exact against the legacy eager
+    generators by tests/test_streams.py):
+
+      * ``recode="naive"``: one `add_into` per *set* bit b - byte-for-byte
+        the schedule `program.ooor_dot` used to emit eagerly;
+      * signed modes (``"booth"`` / ``"naf"``): one complement of the
+        weight into the `neg` scratch iff any digit is negative, then per
+        nonzero digit a segment add (+1) or preset-carry complement add
+        with sign extension (-1) - byte-for-byte `program.ooor_dot_booth`
+        (including its stop at the first digit whose weight segment no
+        longer fits the accumulator).
+    """
+    from . import program as pgen           # deferred: program imports ir
+    w, acc = list(slot.weight), list(slot.acc)
+    nw = len(w)
+    digits = recode_digits(value, slot.stream.n_bits, recode)
+    if any(d < 0 for d in digits):
+        if slot.stream.digit_set != "signed" or slot.neg is None:
+            raise ValueError(
+                f"recode={recode!r} produced negative digits but stream "
+                f"{slot.stream.name!r} has digit_set="
+                f"{slot.stream.digit_set!r} / no neg scratch rows; "
+                f"emit the StreamMac with neg rows or use recode='naive'")
+        neg = list(slot.neg)[:nw]
+        out.extend(pgen.logic2(w, w, neg, isa.TT_NOT_A)._slots)
+    if recode == "naive":
+        for off, d in enumerate(digits):
+            if d:
+                out.extend(pgen.add_into(acc, w, off)._slots)
+        return
+    for off, d in enumerate(digits):
+        if d == 0:
+            continue
+        if off + nw > len(acc):
+            break                            # legacy ooor_dot_booth stop
+        if d > 0:
+            out.extend(pgen.add_into(acc, w, off)._slots)
+        else:
+            seg = acc[off:off + nw]
+            out.extend(pgen.preset_carry()._slots)
+            out.extend(pgen.add(seg, neg, seg, preset=True,
+                                store_cout=False)._slots)
+            rem = acc[off + nw:]
+            if rem:
+                out.extend(pgen.add_ext(rem, [1] * len(rem), rem,
+                                        store_cout=False,
+                                        preset=True)._slots)
+
+
+def specialize_streams(program: "Program", values: Sequence[int],
+                       recode: str = "naive", optimize: bool = False,
+                       live_out=None) -> "Program":
+    """Substitute concrete values for a program's streamed operands.
+
+    The pass-pipeline stage that turns a symbolic (value-independent)
+    program into the value-dependent schedule the FSM would actually
+    emit: every `StreamExt` gets its concrete broadcast bit, and every
+    `StreamMac` expands into adds for the *nonzero digits* of the
+    recoded value only (dead-digit elimination - the paper's OOOR
+    zero-bit skipping, plus Booth/NAF signed-digit recoding when
+    ``recode`` selects it).
+
+    `values[i]` feeds every slot whose stream has ``index == i``.
+    Concrete slots pass through untouched, so specialization composes
+    with already-lowered prefixes (accumulator zeroing, shifts).  With
+    ``optimize=True`` the result additionally folds through the default
+    pass pipeline (constant-row folding, dead-write elimination,
+    dual-port co-issue) so recoded add passes still pick up W2 riders.
+    """
+    if not isinstance(program, Program):
+        program = Program(program)
+    streams = program.streams()
+    if streams and streams[-1].index >= len(values):
+        raise ValueError(
+            f"program references stream index {streams[-1].index} but "
+            f"only {len(values)} values were supplied")
+    for s in streams:
+        v = int(values[s.index])
+        if not 0 <= v < (1 << s.n_bits):
+            raise ValueError(f"value {v} out of range for {s.n_bits}-bit "
+                             f"stream {s.name!r}")
+    out: List[Slot] = []
+    for slot in program._slots:
+        if isinstance(slot, StreamMac):
+            _expand_stream_mac(slot, int(values[slot.stream.index]),
+                               recode, out)
+        elif isinstance(slot, StreamExt):
+            bit = (int(values[slot.stream.index]) >> slot.bit) & 1
+            out.append((dataclasses.replace(slot.instr, ext_bit=bit),))
+        else:
+            out.append(slot)
+    lo = live_out if live_out is not None else program.live_out
+    p = Program.from_slots(out, name=f"{program.name}@{recode}",
+                           live_out=lo)
+    return p.optimize() if optimize else p
 
 
 def _slot_vector(slot: Slot) -> List[int]:

@@ -18,7 +18,8 @@ from __future__ import annotations
 from typing import List, Optional, Sequence
 
 from . import ir
-from .ir import Operand, Program, RowAllocator
+from .ir import (Operand, Program, RowAllocator, StreamExt, StreamMac,
+                 StreamedOperand, specialize_streams)
 from .isa import (Instr, N_COLS, PRED_ALWAYS, PRED_CARRY, PRED_MASK,
                   PRED_NOT_CARRY, ROW_ONES, TT_AND, TT_COPY_A, TT_COPY_B,
                   TT_NOT_A, TT_ONE, TT_OR, TT_XNOR, TT_XOR, TT_ZERO,
@@ -58,10 +59,33 @@ def logic2(src1: Rows, src2: Rows, dst: Rows, tt: int,
 
 def logic_ext(src1: Rows, dst: Rows, tt: int, ext_bits: Sequence[int],
               pred_sel: int = PRED_ALWAYS) -> Program:
-    """OOOR bitwise op against an outside operand broadcast bit-by-bit."""
+    """OOOR bitwise op against an outside operand broadcast bit-by-bit.
+
+    The eager (pre-specialized) form; `logic_ext_stream` emits the same
+    schedule symbolically against a `StreamedOperand`, for programs built
+    before the outside value is known.
+    """
     return Program(_w1(src1_row=a, dst_row=d, truth_table=tt, c_rst=1,
                        b_ext=1, ext_bit=e, pred_sel=pred_sel)
                    for a, d, e in zip(src1, dst, ext_bits))
+
+
+def logic_ext_stream(src1: Rows, dst: Rows, tt: int,
+                     stream: StreamedOperand,
+                     pred_sel: int = PRED_ALWAYS) -> Program:
+    """Symbolic `logic_ext`: dst <- f(src1, stream), value bound later.
+
+    Bit i of the streamed operand feeds row i's broadcast; specialization
+    with value v yields exactly ``logic_ext(src1, dst, tt, bits_of(v))``.
+    """
+    prog = Program(name=f"logic_ext[{stream.name}]")
+    for i, (a, d) in enumerate(zip(src1, dst)):
+        if i >= stream.n_bits:
+            break                     # legacy zip-with-bits truncation
+        prog.append_stream(StreamExt(
+            _w1(src1_row=a, dst_row=d, truth_table=tt, c_rst=1, b_ext=1,
+                pred_sel=pred_sel), stream, i))
+    return prog
 
 
 def clear_latches() -> Program:
@@ -107,7 +131,11 @@ def add(a: Rows, b: Rows, dst: Rows, pred_sel: int = PRED_ALWAYS,
 def add_ext(a: Rows, const_bits: Sequence[int], dst: Rows,
             pred_sel: int = PRED_ALWAYS, store_cout: bool = True,
             preset: bool = False) -> Program:
-    """OOOR add: dst <- a + constant (constant streamed bit-serially)."""
+    """OOOR add: dst <- a + constant (constant streamed bit-serially).
+
+    The eager form; `add_ext_stream` emits the same n+1-cycle schedule
+    symbolically when the added value is bound at specialization time.
+    """
     n = len(a)
     prog = Program()
     for i in range(n):
@@ -115,6 +143,33 @@ def add_ext(a: Rows, const_bits: Sequence[int], dst: Rows,
                         b_ext=1, ext_bit=const_bits[i], c_en=1,
                         c_rst=1 if (i == 0 and not preset) else 0,
                         pred_sel=pred_sel))
+    if store_cout:
+        prog += store_carry(dst[n], pred_sel=pred_sel)
+    return prog
+
+
+def add_ext_stream(a: Rows, stream: StreamedOperand, dst: Rows,
+                   pred_sel: int = PRED_ALWAYS, store_cout: bool = True,
+                   preset: bool = False) -> Program:
+    """Symbolic OOOR add-const: dst <- a + stream, value bound later.
+
+    Every bit position costs one cycle regardless of its value (the
+    carry must ripple), so specialization substitutes broadcast bits
+    without dead-digit elimination; with value v the result equals
+    ``add_ext(a, bits_of(v), dst, ...)`` instruction-for-instruction.
+    Bits past the stream width add zero (carry propagation only).
+    """
+    n = len(a)
+    prog = Program(name=f"add_ext[{stream.name}]")
+    for i in range(n):
+        instr = _w1(src1_row=a[i], dst_row=dst[i], truth_table=TT_XOR,
+                    b_ext=1, c_en=1,
+                    c_rst=1 if (i == 0 and not preset) else 0,
+                    pred_sel=pred_sel)
+        if i < stream.n_bits:
+            prog.append_stream(StreamExt(instr, stream, i))
+        else:
+            prog.append(instr)        # ext_bit 0: ripple the carry only
     if store_cout:
         prog += store_carry(dst[n], pred_sel=pred_sel)
     return prog
@@ -277,30 +332,66 @@ def reduce_to_scalar(val: Rows, scratch: Rows, width: int,
 # FIR filter (Sec. IV-C): resident taps, streamed samples, chained shifts
 # ---------------------------------------------------------------------------
 
-def fir_sample(taps: Rows, acc: Rows, x_t: int, x_bits: int,
-               shift: bool = True) -> Program:
-    """One transposed-FIR sample step: accumulate, then shift partials.
+def fir_sample_stream(taps: Rows, acc: Rows, stream: StreamedOperand,
+                      shift: bool = True,
+                      neg_scratch: Optional[Rows] = None) -> Program:
+    """Symbolic transposed-FIR sample step: accumulate stream, then shift.
 
-    Every lane holds one resident tap (lane j of the chained row = h_j)
-    and a partial sum.  The streamed sample x_t is an outside operand the
-    FSM inspects (OOOR, Sec. III-I): each *set* bit b of x_t triggers one
-    add of the tap rows into the accumulator at offset b - zero bits cost
-    nothing.  The trailing chained left shift moves every partial one lane
-    toward lane 0 (crossing block seams via the corner PEs), implementing
-    the transposed-form delay line: s_j(t) = h_j * x(t) + s_{j+1}(t-1).
+    The streamed sample is a `StreamMac` placeholder - the value-dependent
+    accumulate schedule is chosen by `ir.specialize_streams` (naive
+    zero-skip or Booth/NAF signed digits when `neg_scratch` rows are
+    given); the trailing chained left shift is concrete.
     """
-    assert 0 <= x_t < (1 << x_bits)
-    prog = Program()
-    for b in range(x_bits):
-        if (x_t >> b) & 1:
-            prog += add_into(acc, taps, b)
+    prog = Program(name=f"fir_sample[{stream.name}]")
+    prog.append_stream(StreamMac(stream, tuple(taps), tuple(acc),
+                                 None if neg_scratch is None
+                                 else tuple(neg_scratch)))
     if shift:
         prog += shift_lanes(acc, acc, left=True)
     return prog
 
 
-def fir(taps: Rows, acc: Rows, x_values: Sequence[int],
-        x_bits: int) -> Program:
+def fir_sample(taps: Rows, acc: Rows, x_t: int, x_bits: int,
+               shift: bool = True, recode: str = "naive",
+               neg_scratch: Optional[Rows] = None) -> Program:
+    """One transposed-FIR sample step: accumulate, then shift partials.
+
+    Every lane holds one resident tap (lane j of the chained row = h_j)
+    and a partial sum.  The streamed sample x_t is an outside operand the
+    FSM inspects (OOOR, Sec. III-I): only the *nonzero digits* of the
+    recoded sample trigger adds of the tap rows into the accumulator -
+    zero digits cost nothing.  The schedule is emitted symbolically
+    (`fir_sample_stream`) and specialized here; signed recodings
+    (``"booth"`` / ``"naf"``) need `neg_scratch` rows for the tap
+    complement.  The trailing chained left shift moves every partial one
+    lane toward lane 0 (crossing block seams via the corner PEs),
+    implementing the delay line: s_j(t) = h_j * x(t) + s_{j+1}(t-1).
+    """
+    sym = fir_sample_stream(taps, acc,
+                            StreamedOperand(0, x_bits, "x_t"),
+                            shift=shift, neg_scratch=neg_scratch)
+    return specialize_streams(sym, [int(x_t)], recode=recode)
+
+
+def fir_stream(taps: Rows, acc: Rows, n_samples: int, x_bits: int,
+               neg_scratch: Optional[Rows] = None) -> Program:
+    """Symbolic transposed-form FIR over `n_samples` streamed samples.
+
+    Sample t is stream index t; `ir.specialize_streams` with the concrete
+    sample vector produces the value-dependent schedule.
+    """
+    prog = zero_rows(acc)
+    prog.name = "fir"
+    for t in range(n_samples):
+        prog += fir_sample_stream(taps, acc,
+                                  StreamedOperand(t, x_bits, f"x[{t}]"),
+                                  neg_scratch=neg_scratch)
+    return prog
+
+
+def fir(taps: Rows, acc: Rows, x_values: Sequence[int], x_bits: int,
+        recode: str = "naive",
+        neg_scratch: Optional[Rows] = None) -> Program:
     """Transposed-form FIR: y(t) = sum_j h_j * x(t - j) (Sec. IV-C).
 
     Taps stay resident one-per-lane across `n_blocks * 160` chained lanes;
@@ -310,18 +401,45 @@ def fir(taps: Rows, acc: Rows, x_values: Sequence[int],
     one block's 160 lanes only works on a chain=True array - exactly the
     paper's FIR benchmark configuration (Sec. III-F / IV-C).
 
+    Emitted unspecialized (`fir_stream`) then specialized against the
+    sample vector: ``recode`` picks the digit set per sample (signed
+    modes need `neg_scratch` rows for the tap complement).
+
     acc needs >= x_bits + tap_bits rows (tap_bits + x_bits + log2(n_taps)
     to be overflow-safe for the full filter).
     """
-    prog = zero_rows(acc)
-    for x_t in x_values:
-        prog += fir_sample(taps, acc, int(x_t), x_bits)
-    return prog
+    sym = fir_stream(taps, acc, len(x_values), x_bits,
+                     neg_scratch=neg_scratch)
+    return specialize_streams(sym, [int(v) for v in x_values],
+                              recode=recode)
 
 
 # ---------------------------------------------------------------------------
 # OOOR dot product (Sec. III-I): weights resident, activations streamed
 # ---------------------------------------------------------------------------
+
+def ooor_dot_stream(weight_rows: Sequence[Rows], x_bits: int, acc: Rows,
+                    neg_scratch: Optional[Rows] = None,
+                    first_stream: int = 0, zero_acc: bool = True) -> Program:
+    """Symbolic OOOR dot product: acc <- sum_j w_j * stream_j.
+
+    The value-independent template every streamed-GEMV consumer shares:
+    element j is stream index ``first_stream + j``; `specialize_streams`
+    substitutes the concrete activation vector and picks the digit
+    schedule (naive zero-skip, or Booth/NAF when `neg_scratch` rows are
+    provided for the complement of a negatively-weighted digit).
+    """
+    prog = Program(name="ooor_dot")
+    if zero_acc:
+        prog += zero_rows(acc)
+    neg = None if neg_scratch is None else tuple(neg_scratch)
+    for j, w in enumerate(weight_rows):
+        prog.append_stream(StreamMac(
+            StreamedOperand(first_stream + j, x_bits, f"x[{j}]",
+                            digit_set="binary" if neg is None else "signed"),
+            tuple(w), tuple(acc), neg))
+    return prog
+
 
 def ooor_dot(weight_rows: Sequence[Rows], x_values: Sequence[int],
              x_bits: int, acc: Rows) -> Program:
@@ -329,18 +447,14 @@ def ooor_dot(weight_rows: Sequence[Rows], x_values: Sequence[int],
 
     For each j, only the *set* bits b of x_j trigger an add of w_j into the
     accumulator at offset b - the paper's zero-bit-skipping optimization
-    (~2x on average vs. streaming all bits).  The instruction generator
-    (this function) inspects x, which is exactly the OOOR mechanism: the
-    outside operand is visible to the FSM, not stored in the array.
+    (~2x on average vs. streaming all bits).  The schedule is emitted
+    unspecialized (`ooor_dot_stream`) and specialized here with naive
+    binary digits, which is exactly the OOOR mechanism: the outside
+    operand is visible to the FSM, not stored in the array.
     """
-    prog = Program()
-    prog += zero_rows(acc)
-    for j, xj in enumerate(x_values):
-        assert 0 <= xj < (1 << x_bits)
-        for b in range(x_bits):
-            if (xj >> b) & 1:
-                prog += add_into(acc, weight_rows[j], b)
-    return prog
+    sym = ooor_dot_stream(weight_rows, x_bits, acc)
+    return specialize_streams(sym, [int(v) for v in x_values],
+                              recode="naive")
 
 
 # ---------------------------------------------------------------------------
@@ -582,56 +696,27 @@ def booth_digits(x: int, n_bits: int) -> List[int]:
     weight among signed-digit representations - never more nonzero
     digits than binary, and ~2x fewer for runs of ones: the paper's
     "efficient algorithms like booth multiplication can also be
-    deployed" (Sec. III-I).
+    deployed" (Sec. III-I).  Legacy alias of `ir.naf_digits`; the classic
+    radix-2 recoding lives at `ir.booth_radix2_digits`.
     """
-    digits = []
-    while x:
-        if x & 1:
-            d = 2 - (x & 3)              # +1 if x%4==1, -1 if x%4==3
-            x -= d
-        else:
-            d = 0
-        digits.append(d)
-        x >>= 1
-    return digits
+    return ir.naf_digits(x)
 
 
 def ooor_dot_booth(weight_rows: Sequence[Rows], x_values: Sequence[int],
                    x_bits: int, acc: Rows, neg_scratch: Rows
                    ) -> Program:
-    """OOOR dot product with Booth-recoded outside operand.
+    """OOOR dot product with NAF-Booth-recoded outside operand.
 
     For x values with long runs of ones (e.g. 0b0111110), Booth recoding
     cuts add passes well below popcount(x); worst case equals naive OOOR.
     Negative digits subtract: w is complemented into scratch once per
-    element, then added with a preset carry at the digit offset.
+    element, then added with a preset carry at the digit offset.  The
+    schedule is the NAF specialization of the same `ooor_dot_stream`
+    template the naive dot uses.
     """
-    nw = len(weight_rows[0])
-    prog = zero_rows(acc)
-    for j, xj in enumerate(x_values):
-        w = weight_rows[j]
-        digits = booth_digits(xj, x_bits)
-        if any(d < 0 for d in digits):
-            prog += logic2(w, w, neg_scratch[:nw], TT_NOT_A)
-        for off, d in enumerate(digits):
-            if d == 0:
-                continue
-            if off + nw > len(acc):
-                break
-            if d > 0:
-                prog += add_into(acc, w, off)
-            else:
-                # acc += (~w + 1) << off : add complement with preset carry
-                seg = list(acc[off:off + nw])
-                prog += preset_carry()
-                prog += add(seg, neg_scratch[:nw], seg, preset=True,
-                            store_cout=False)
-                # sign-extend the complement through the top bits
-                rem_rows = list(acc[off + nw:])
-                if rem_rows:
-                    prog += add_ext(rem_rows, [1] * len(rem_rows), rem_rows,
-                                    store_cout=False, preset=True)
-    return prog
+    sym = ooor_dot_stream(weight_rows, x_bits, acc, neg_scratch=neg_scratch)
+    return specialize_streams(sym, [int(v) for v in x_values],
+                              recode="naf")
 
 
 # ---------------------------------------------------------------------------

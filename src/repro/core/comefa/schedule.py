@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import layout, program, timing
+from . import ir, layout, program, timing
 from .ir import Operand, Program, RowAllocator
 from .isa import COL_MUX, N_COLS, USABLE_ROWS, ceil_log2
 
@@ -384,6 +384,12 @@ class GemvPlan:
     accumulator (so only the final tile pays an unload).  This lifts the
     old `comefa_gemv` cap of ``k * w_bits + acc_bits <= USABLE_ROWS`` -
     any k now schedules as ``ceil(k / k_tile)`` tiles.
+
+    Chunk programs are emitted *symbolically* (`program.ooor_dot_stream`
+    templates shared across every x) and specialized per activation
+    vector through `ir.specialize_streams`; planning with
+    ``reserve_neg=True`` additionally sets aside a `neg` scratch region
+    so signed recodings (Booth/NAF) can complement a weight in place.
     """
     k: int
     n: int
@@ -395,6 +401,7 @@ class GemvPlan:
     n_tiles: int
     buffers: Tuple[GemvBuffer, GemvBuffer]
     acc: Operand
+    neg: Optional[Operand] = None
 
     def tiles(self) -> List[GemvTile]:
         return [GemvTile(t, t * self.k_tile,
@@ -413,60 +420,93 @@ class GemvPlan:
             return 0
         return self.acc_bits * COL_MUX
 
+    def symbolic_chunk_program(self, tile: GemvTile) -> Program:
+        """The shared, value-independent chunk template (cached per shape).
+
+        One `StreamMac` per resident weight: stream index j names element
+        j of the chunk's activation slice.  Tile 0 zeroes the accumulator
+        first; later chunks add on top.  Every x-vector's concrete chunk
+        program - and every recoding of it - is a specialization of this
+        one object, which is what lets the batched grid sweep share the
+        template across slots while each slot streams its own digits.
+        """
+        key = ("gemv_sym", self.w_bits, self.x_bits, self.acc_bits,
+               self.k_tile, tile.n_elems, tile.buffer, tile.index == 0,
+               self.neg is not None)
+        prog = _TILE_PROGRAMS.get(key)
+        if prog is None:
+            buf = self.buffers[tile.buffer]
+            weights = [buf.weight_rows(j, self.w_bits)
+                       for j in range(tile.n_elems)]
+            prog = program.ooor_dot_stream(
+                weights, self.x_bits, self.acc, neg_scratch=self.neg,
+                zero_acc=tile.index == 0)
+            prog.name = f"gemv_chunk{tile.index}"
+            prog.live_out = frozenset(self.acc)
+            _TILE_PROGRAMS[key] = prog
+        return prog
+
     def tile_program(self, tile: GemvTile, x_chunk: Sequence[int],
-                     optimized: bool = True) -> Program:
+                     optimized: bool = True,
+                     recode: str = "naive") -> Program:
         """OOOR accumulate of one streamed chunk (value-dependent).
 
-        Tile 0 zeroes the accumulator first; later chunks add on top.
-        Only *set* bits of each streamed activation cost adds (the
-        zero-bit skipping of Sec. III-I).
+        `ir.specialize_streams` binds the chunk's activation slice to the
+        shared symbolic template: only *nonzero digits* of each recoded
+        activation cost adds (the zero-bit skipping of Sec. III-I;
+        ``recode`` in {"naive", "booth", "naf"} picks the digit set -
+        signed modes need a plan built with ``reserve_neg=True``).
         """
         assert len(x_chunk) == tile.n_elems
-        buf = self.buffers[tile.buffer]
-        prog = Program(name=f"gemv_chunk{tile.index}")
-        if tile.index == 0:
-            prog += program.zero_rows(self.acc)
-        for j, xj in enumerate(x_chunk):
-            xj = int(xj)
-            assert 0 <= xj < (1 << self.x_bits)
-            w = buf.weight_rows(j, self.w_bits)
-            for b in range(self.x_bits):
-                if (xj >> b) & 1:
-                    prog += program.add_into(self.acc, w, b)
-        prog = prog.with_live_out(set(self.acc))
+        prog = ir.specialize_streams(self.symbolic_chunk_program(tile),
+                                     [int(v) for v in x_chunk],
+                                     recode=recode)
+        prog.name = f"gemv_chunk{tile.index}@{recode}"
         return prog.optimize() if optimized else prog
 
-    def schedule(self, x: Sequence[int], optimized: bool = True) -> Schedule:
+    def schedule(self, x: Sequence[int], optimized: bool = True,
+                 recode: str = "naive") -> Schedule:
         x = [int(v) for v in x]
         assert len(x) == self.k
         costs = []
         for t in self.tiles():
             prog = self.tile_program(t, x[t.k_start:t.k_end],
-                                     optimized=optimized)
+                                     optimized=optimized, recode=recode)
             costs.append((self.load_cycles(t), prog.cycles,
                           self.unload_cycles(t)))
         return Schedule(costs, name=f"gemv_k{self.k}")
 
 
-def gemv_k_tile(w_bits: int, acc_bits: int) -> int:
-    """Largest weight chunk fitting two buffers beside the accumulator."""
-    return (USABLE_ROWS - acc_bits) // (2 * w_bits)
+def gemv_k_tile(w_bits: int, acc_bits: int,
+                reserve_neg: bool = False) -> int:
+    """Largest weight chunk fitting two buffers beside the accumulator.
+
+    With ``reserve_neg`` a `w_bits`-row complement scratch region is
+    carved out too (signed Booth/NAF digit streams subtract through it).
+    """
+    return (USABLE_ROWS - acc_bits
+            - (w_bits if reserve_neg else 0)) // (2 * w_bits)
 
 
 def plan_gemv(k: int, n: int, w_bits: int, x_bits: int,
-              acc_bits: int = 32, k_tile: Optional[int] = None) -> GemvPlan:
+              acc_bits: int = 32, k_tile: Optional[int] = None,
+              reserve_neg: bool = False) -> GemvPlan:
     """Chunk a length-k streamed GEMV over ``ceil(n / 160)`` SIMD blocks.
 
     No chaining is needed: every lane owns one independent output, and
     all blocks execute the same chunk program (Sec. III-D shared FSM).
+    ``reserve_neg`` sets aside the complement scratch rows signed
+    recodings (Booth/NAF digit streams) subtract through; the default
+    keeps the naive-OOOR geometry unchanged.
     """
     assert k >= 1 and n >= 1
-    max_tile = gemv_k_tile(w_bits, acc_bits)
+    max_tile = gemv_k_tile(w_bits, acc_bits, reserve_neg=reserve_neg)
     if max_tile < 1:
         raise ValueError(
             f"no room for even one double-buffered {w_bits}-bit weight "
-            f"beside a {acc_bits}-bit accumulator ({USABLE_ROWS} usable "
-            f"rows)")
+            f"beside a {acc_bits}-bit accumulator"
+            f"{' and a complement scratch' if reserve_neg else ''} "
+            f"({USABLE_ROWS} usable rows)")
     if k_tile is None:
         k_tile = min(k, max_tile)
     if not 1 <= k_tile <= max_tile:
@@ -475,8 +515,9 @@ def plan_gemv(k: int, n: int, w_bits: int, x_bits: int,
     buffers = tuple(GemvBuffer(i, alloc.alloc(k_tile * w_bits, f"wbuf{i}"))
                     for i in range(2))
     acc = alloc.alloc(acc_bits, "acc")
+    neg = alloc.alloc(w_bits, "neg") if reserve_neg else None
     n_blocks = max(1, -(-n // N_COLS))
     n_tiles = -(-k // k_tile)
     return GemvPlan(k=k, n=n, w_bits=w_bits, x_bits=x_bits,
                     acc_bits=acc_bits, n_blocks=n_blocks, k_tile=k_tile,
-                    n_tiles=n_tiles, buffers=buffers, acc=acc)
+                    n_tiles=n_tiles, buffers=buffers, acc=acc, neg=neg)

@@ -52,17 +52,151 @@ def fp_mac_cycles(e: int, m: int) -> int:
     return fp_mul_cycles(e, m) + fp_add_cycles(e, m)
 
 
+# ---------------------------------------------------------------------------
+# streamed-operand digit statistics (Sec. III-I OOOR + Booth/NAF recoding)
+#
+# The IR's `specialize_streams` pass expands a streamed MAC into one
+# accumulator-segment add per *nonzero digit* of the recoded operand, so
+# cycle counts are digit statistics.  These helpers are the single source
+# of truth the perf model prices OOOR from - no more hard-coded "/ 2".
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def expected_nonzero_digits(n_bits: int, recode: str = "naive") -> float:
+    """Expected nonzero digits of a uniform n-bit operand, per recoding.
+
+    Exact (enumerated over all 2^n values, not asymptotic):
+      * ``"naive"``: mean popcount = n/2;
+      * ``"naf"``:   mean NAF weight -> ~n/3 + O(1) (the canonical form's
+        minimal-density advantage - the paper's "Booth" win);
+      * ``"booth"``: classic radix-2 run-boundary count -> ~(n+1)/2 on
+        average (its win is run-heavy streams, not uniform ones).
+
+    NAF weight is computed with the identity weight(x) = popcount(x ^ 3x),
+    Booth boundaries with popcount(x ^ (x << 1)); both are asserted
+    against `ir.recode_digits` in tests.  Past 20 bits (beyond every
+    precision in Table II) the per-bit densities have converged and the
+    asymptotic forms are used.
+    """
+    import numpy as np
+    assert n_bits >= 1
+    if recode == "naive":
+        return n_bits / 2.0
+    if recode not in ("naf", "booth"):
+        raise ValueError(f"unknown recode mode {recode!r}")
+    if n_bits > 20:
+        # asymptotic NAF density n/3 + 4/9; Booth boundary count is
+        # exactly (n+1)/2 at every width (n+1 positions, each p=1/2)
+        return (n_bits / 3.0 + 4.0 / 9.0 if recode == "naf"
+                else (n_bits + 1) / 2.0)
+    x = np.arange(1 << n_bits, dtype=np.int64)
+    h = x ^ (3 * x) if recode == "naf" else x ^ (x << 1)
+    ones = float(np.unpackbits(h.astype(">u8").view(np.uint8)).sum())
+    return ones / (1 << n_bits)
+
+
+@functools.lru_cache(maxsize=None)
+def _signed_digit_stats(n_bits: int, recode: str) -> tuple:
+    """(P(any negative digit), E[negative digits]) for uniform n-bit x.
+
+    The expected per-element overhead of a signed recoding: one w_bits
+    complement whenever any digit is negative, plus one preset-carry
+    cycle per negative digit.  Exact via a vectorized digit recursion
+    over all 2^n values (n capped at 20 - beyond every Table II
+    precision - with the per-bit slope extrapolated past the cap).
+    """
+    import numpy as np
+    if recode == "naive":
+        return 0.0, 0.0
+    if n_bits > 20:
+        p20, e20 = _signed_digit_stats(20, recode)
+        _, e19 = _signed_digit_stats(19, recode)
+        return p20, e20 + (n_bits - 20) * (e20 - e19)
+    x = np.arange(1 << n_bits, dtype=np.int64)
+    neg = np.zeros_like(x)
+    if recode == "booth":
+        # d_i = x_{i-1} - x_i: negative exactly at 0 -> 1 rising edges
+        edges = x & ~(x << 1)
+        for i in range(n_bits):
+            neg += (edges >> i) & 1
+    else:                                   # naf
+        cur = x.copy()
+        while cur.any():
+            d = np.where(cur & 1, 2 - (cur & 3), 0)
+            neg += d < 0
+            cur = (cur - d) >> 1
+    return (float((neg > 0).mean()), float(neg.mean()))
+
+
+def signed_recode_overhead(w_bits: int, n_bits: int,
+                           recode: str = "naive") -> float:
+    """Expected extra cycles per streamed element a signed recoding pays:
+    the weight complement (w_bits, iff any digit is negative) plus one
+    carry preset per negative digit.  0.0 for naive."""
+    p_neg, e_neg = _signed_digit_stats(n_bits, recode)
+    return p_neg * w_bits + e_neg
+
+
+def zero_skip_speedup(n_bits: int, recode: str = "naive") -> float:
+    """Cycle-count factor OOOR digit streaming saves vs streaming all bits.
+
+    ``n_bits / expected_nonzero_digits``: exactly 2.0 for naive zero-bit
+    skipping on a uniform operand (the paper's reported ~2x, Sec. III-I),
+    ~3x for NAF recoding.  `fpga_model/perf.py` divides generic-MAC
+    cycle counts by this instead of a hard-coded 2.
+    """
+    return n_bits / expected_nonzero_digits(n_bits, recode)
+
+
+def streamed_mac_cycles(w_bits: int, acc_bits: int, x: int, x_bits: int,
+                        recode: str = "naive") -> int:
+    """Exact cycles of one specialized streamed MAC (``acc += w * x``).
+
+    Mirrors `ir.specialize_streams`'s `StreamMac` expansion: a digit at
+    offset b costs ``acc_bits - b`` add/ripple cycles (+1 carry preset
+    for a negative digit), one w_bits-cycle complement is paid iff any
+    digit is negative, and signed modes stop at the first digit whose
+    weight segment no longer fits the accumulator.  Asserted cycle-exact
+    against the generated programs in tests/test_streams.py.
+    """
+    from .ir import recode_digits
+    digits = recode_digits(int(x), x_bits, recode)
+    total = w_bits if any(d < 0 for d in digits) else 0
+    for off, d in enumerate(digits):
+        if d == 0:
+            continue
+        if recode != "naive" and off + w_bits > acc_bits:
+            break
+        total += acc_bits - off + (1 if d < 0 else 0)
+    return total
+
+
 def ooor_dot_cycles(k: int, w_bits: int, x_bits: int,
-                    acc_bits: int, zero_skip: bool = True) -> int:
+                    acc_bits: int, zero_skip: bool = True,
+                    recode: str = "naive", x_values=None) -> int:
     """Dot product of length k with weights resident, x streamed (Sec. III-I).
 
-    Each contributing x-bit costs one accumulator-segment add.  With OOOR
-    zero-bit skipping the average x has x_bits/2 set bits -> ~2x fewer
-    cycles than the naive all-bits schedule (the paper's reported 2x).
+    Each contributing digit costs one accumulator-segment add.  Given the
+    concrete ``x_values`` the count is *exact* - it equals the generated
+    (unoptimized) `program.ooor_dot` / `ooor_dot_booth` /
+    `specialize_streams` schedule cycle-for-cycle, for every recoding.
+    Without values, the expected-density estimate: with OOOR zero-bit
+    skipping the average x has ``expected_nonzero_digits(x_bits, recode)``
+    contributing digits (x_bits/2 naive - the paper's reported 2x -
+    ~x_bits/3 NAF) vs all x_bits for the naive all-bits schedule.
     """
-    bits_per_elem = x_bits / 2 if zero_skip else x_bits
+    if x_values is not None:
+        assert len(x_values) == k, (len(x_values), k)
+        return acc_bits + sum(
+            streamed_mac_cycles(w_bits, acc_bits, int(v), x_bits,
+                                recode=recode)
+            for v in x_values)
+    bits_per_elem = (expected_nonzero_digits(x_bits, recode) if zero_skip
+                     else x_bits)
     per_add = add_cycles(w_bits) + max(0, acc_bits - (w_bits + 1))  # ripple
-    return int(round(k * bits_per_elem * per_add)) + acc_bits  # + acc zeroing
+    overhead = k * signed_recode_overhead(w_bits, x_bits, recode)
+    return int(round(k * bits_per_elem * per_add + overhead)) \
+        + acc_bits                                          # + acc zeroing
 
 
 def load_store_cycles(n_elems: int, n_bits: int, port_width: int = 40) -> int:
@@ -109,27 +243,35 @@ def chained_reduction_cycles(n_bits: int, lanes: int = 160,
 
 
 def fir_cycles(n_samples: int, x_bits: int, acc_bits: int,
-               x_values=None, include_init: bool = True) -> int:
+               x_values=None, include_init: bool = True,
+               recode: str = "naive", tap_bits: int = 0) -> int:
     """Transposed-form FIR over chained blocks (Sec. IV-C).
 
-    Per sample: one accumulator-segment add per *set* bit b of the sample
-    (OOOR zero-bit skipping; an add at offset b ripples acc_bits - b
-    cycles) plus an acc_bits-cycle chained left shift of the partial sums.
-    Exact (matches `program.fir`) when the sample stream `x_values` is
-    given; otherwise the paper's average-density estimate (x_bits/2 set
-    bits at mean offset (x_bits-1)/2).  `include_init` adds the one-off
+    Per sample: one accumulator-segment add per *nonzero digit* b of the
+    recoded sample (OOOR zero-bit skipping; an add at offset b ripples
+    acc_bits - b cycles) plus an acc_bits-cycle chained left shift of the
+    partial sums.  Exact (matches `program.fir` for the same recoding)
+    when the sample stream `x_values` is given; otherwise the paper's
+    average-density estimate (``expected_nonzero_digits`` digits at mean
+    offset (x_bits-1)/2).  Signed recodings need `tap_bits` for the tap
+    complement a negative digit pays.  `include_init` adds the one-off
     accumulator zeroing.
     """
+    if recode != "naive" and tap_bits <= 0:
+        raise ValueError("signed recodings price a tap complement: "
+                         "pass tap_bits")
     if x_values is not None:
         assert n_samples == len(x_values), (
             f"n_samples={n_samples} inconsistent with "
             f"{len(x_values)} x_values")
-        adds = sum(acc_bits - b
-                   for x_t in x_values for b in range(x_bits)
-                   if (int(x_t) >> b) & 1)
+        adds = sum(streamed_mac_cycles(tap_bits, acc_bits, int(x_t),
+                                       x_bits, recode=recode)
+                   for x_t in x_values)
     else:
-        adds = int(round(n_samples * (x_bits / 2)
-                         * (acc_bits - (x_bits - 1) / 2)))
+        adds = int(round(n_samples * (
+            expected_nonzero_digits(x_bits, recode)
+            * (acc_bits - (x_bits - 1) / 2)
+            + signed_recode_overhead(tap_bits, x_bits, recode))))
     total = adds + n_samples * acc_bits
     return total + (acc_bits if include_init else 0)
 
@@ -257,7 +399,8 @@ def achieved_cycles(op: str, *args: int) -> int:
     Supported ops (args):
       add(n) | sub(n) | mul(n) | mac(n, acc_bits) | zero(n) | search(n)
       reduction(n_bits, steps) | fp_mul(e, m) | fp_add(e, m)
-      ooor_dot(k, w_bits, x_bits, acc_bits)   [average-density operand]
+      ooor_dot(k, w_bits, x_bits, acc_bits[, recode])
+                                              [average-density operand]
       chained_reduction(n_bits, n_blocks)     [all-lane scalar reduction]
       fir(n_samples, tap_bits, x_bits, acc_bits) [average-density samples]
     """
@@ -320,13 +463,21 @@ def achieved_cycles(op: str, *args: int) -> int:
         acc = a.alloc(acc_bits)
         p = program.fir(taps, acc, x, x_bits)
     elif op == "ooor_dot":
-        k, w_bits, x_bits, acc_bits = args
+        k, w_bits, x_bits, acc_bits = args[:4]
+        recode = args[4] if len(args) > 4 else "naive"
         # deterministic average-density operand: alternating bit pattern
         # has exactly ceil(x_bits/2) set bits (the paper's ~2x zero-skip
         # claim), at any operand width
         x = [sum(1 << b for b in range(0, x_bits, 2))] * k
         w = [a.alloc(w_bits) for _ in range(k)]
-        p = program.ooor_dot(w, x, x_bits, a.alloc(acc_bits))
+        acc = a.alloc(acc_bits)
+        if recode == "naive":
+            p = program.ooor_dot(w, x, x_bits, acc)
+        else:
+            from .ir import specialize_streams
+            sym = program.ooor_dot_stream(w, x_bits, acc,
+                                          neg_scratch=a.alloc(w_bits))
+            p = specialize_streams(sym, x, recode=recode)
     else:
         raise ValueError(f"unknown op {op!r}")
     return p.optimize().cycles

@@ -25,6 +25,7 @@ import numpy as np
 
 from ..core.comefa import (ComefaArray, ComefaGrid, N_COLS, layout, program,
                            schedule)
+from ..core.comefa import ir as ir_mod
 from ..core.comefa.ir import Operand, Program, RowAllocator
 from ..core.comefa.isa import (Instr, N_ROWS, PRED_MASK, RESERVED_ROWS,
                                TT_COPY_A, USABLE_ROWS, ceil_log2)
@@ -87,23 +88,28 @@ def comefa_eltwise_mul(a: np.ndarray, b: np.ndarray, *, bits: int,
 
 def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                 x_bits: int, acc_bits: int = 32,
-                optimized: bool = True) -> np.ndarray:
+                optimized: bool = True,
+                recode: str = "naive") -> np.ndarray:
     """y = w.T @ x with resident weights and a streamed vector (OOOR).
 
     w: [k, n] unsigned ints; x: [k] unsigned ints.  The k dimension is
     chunked through `schedule.GemvPlan`'s double-buffered weight regions
     (chunk t+1 would load while chunk t computes on hardware), so k is no
-    longer capped by the one-shot row budget; each chunk's OOOR program
-    depends on x (the FSM inspects the outside operand - Sec. III-I), so
-    programs are rebuilt per x but still IR-optimized (zero-skip +
-    co-issued clears).  Partial sums accumulate in the shared
+    longer capped by the one-shot row budget.  Chunk programs are the
+    plan's shared *symbolic* templates specialized per x through
+    `ir.specialize_streams` (the FSM inspecting the outside operand -
+    Sec. III-I): ``recode`` picks the digit schedule - ``"naive"``
+    zero-skips binary bits, ``"booth"`` / ``"naf"`` stream signed digits
+    (the plan reserves a complement scratch region) - and the result is
+    bit-exact under every mode.  Partial sums accumulate in the shared
     accumulator; all n outputs extract after the last chunk.
     """
     w = np.asarray(w)
     x = np.asarray(x).ravel()
     k, n = w.shape
     assert x.shape[0] == k
-    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits)
+    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                              reserve_neg=ir_mod.recode_is_signed(recode))
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
     arr = ComefaArray(n_blocks=nb)
@@ -114,7 +120,7 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
             rows = buf.weight_rows(j_local, w_bits)
             layout.place(arr, wj, rows.base, w_bits)
         arr.run(plan.tile_program(tile, x[tile.k_start:tile.k_end],
-                                  optimized=optimized))
+                                  optimized=optimized, recode=recode))
     out = layout.extract(arr, plan.acc.base, acc_bits)
     return out.reshape(-1)[:n]
 
@@ -212,7 +218,7 @@ def comefa_dot(a: np.ndarray, b: np.ndarray, *, bits: int,
 
 def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
                x_bits: int, acc_bits: Optional[int] = None,
-               optimized: bool = True) -> np.ndarray:
+               optimized: bool = True, recode: str = "naive") -> np.ndarray:
     """y[t] = sum_j taps[j] * x[t-j]: resident taps, streamed samples.
 
     The paper's FIR benchmark (Sec. IV-C): taps live transposed one per
@@ -221,9 +227,13 @@ def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
     accumulator add per *set* sample bit plus a chained left shift of the
     partial sums - the transposed-form delay line, with partials hopping
     block seams through the corner PEs.  y[t] drains from lane 0 of
-    block 0 after each sample's accumulate phase.
+    block 0 after each sample's accumulate phase.  Sample programs are
+    specialized from the symbolic `program.fir_sample_stream` template;
+    ``recode`` picks the digit schedule (signed Booth/NAF modes allocate
+    a tap-complement scratch region beside the accumulator).
 
-    With ``optimized=False`` the total simulator cycles equal
+    With ``optimized=False`` (and the default naive recoding) the total
+    simulator cycles equal
     `timing.fir_cycles(len(x), x_bits, acc_bits, x_values=x)` exactly.
     """
     taps = np.asarray(taps).ravel()
@@ -233,20 +243,22 @@ def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
     nb = plan.n_blocks
     if acc_bits is None:
         acc_bits = tap_bits + x_bits + ceil_log2(max(2, n_taps))
-    demand = tap_bits + acc_bits
+    signed = ir_mod.recode_is_signed(recode)
+    demand = tap_bits + acc_bits + (tap_bits if signed else 0)
     assert demand <= USABLE_ROWS, (
-        f"taps + accumulator need {demand} rows, only {USABLE_ROWS} "
-        f"usable rows per block")
+        f"taps + accumulator{' + complement scratch' if signed else ''} "
+        f"need {demand} rows, only {USABLE_ROWS} usable rows per block")
     alloc = RowAllocator()
     tap_rows = alloc.alloc(tap_bits, "taps")
     acc = alloc.alloc(acc_bits, "acc")
+    neg = alloc.alloc(tap_bits, "neg") if signed else None
     arr = ComefaArray(n_blocks=nb, chain=True)
     plan.place(arr, taps, tap_rows.base, tap_bits)
 
     # per-phase programs are cached: repeated samples skip both
     # Python-side generation and the IR pass pipeline
     def cached(key_tail, build):
-        key = (tap_bits, x_bits, acc_bits, optimized) + key_tail
+        key = (tap_bits, x_bits, acc_bits, optimized) + key_tail + (recode,)
         prog = _FIR_CACHE.get(key)
         if prog is None:
             prog = build()
@@ -264,7 +276,9 @@ def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
     for t, x_t in enumerate(x):
         arr.run(cached((int(x_t),),
                        lambda: program.fir_sample(tap_rows, acc, int(x_t),
-                                                  x_bits, shift=False)))
+                                                  x_bits, shift=False,
+                                                  recode=recode,
+                                                  neg_scratch=neg)))
         # y[t] sits in lane 0 of block 0 between accumulate and shift
         y[t] = layout.extract(arr, acc.base, acc_bits, lanes=_LANE0,
                               block=0)[0]
@@ -381,22 +395,44 @@ def _gemv_batched_chunk_program(plan: schedule.GemvPlan,
 
 def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                         x_bits: int, acc_bits: int = 32,
-                        optimized: bool = True, mesh=None) -> np.ndarray:
+                        optimized: bool = True, mesh=None,
+                        recode: Optional[str] = None,
+                        stats: Optional[Dict] = None) -> np.ndarray:
     """y[g] = w[g].T @ x[g] for G independent GEMVs on ONE grid dispatch.
 
-    w: [G, k, n], x: [G, k] unsigned ints.  Geometry comes from the same
-    `schedule.plan_gemv` double-buffered chunking as `comefa_gemv`, with
-    the k-chunk shrunk so each chunk's activation bits fit as broadcast
-    rows (`gemv_batched_k_tile`): per chunk, every slot loads its own
-    weights AND its own x bits, then all slots execute one shared
-    mask-predicated accumulate program.  Bit-identical per slot to G
-    separate `comefa_gemv` calls.  Pass `mesh` to shard the grid axis.
+    w: [G, k, n], x: [G, k] unsigned ints.  Two execution modes:
+
+      * ``recode=None`` (the shared-FSM broadcast): geometry from the
+        same `schedule.plan_gemv` double-buffered chunking as
+        `comefa_gemv`, with the k-chunk shrunk so each chunk's
+        activation bits fit as broadcast rows (`gemv_batched_k_tile`) -
+        every slot loads its own weights AND its own x bits, then all
+        slots execute one shared mask-predicated accumulate program
+        whose cycle count is value-independent (no zero-skipping: the
+        PR-4 trade for grid-wide SIMD).
+      * ``recode="naive" | "booth" | "naf"`` (per-slot streams): one
+        instruction FSM per grid slice.  The plan's *symbolic* chunk
+        template is shared, each slot's activation chunk specializes it
+        into its own digit stream (`ir.specialize_streams`), and
+        `ComefaGrid.run_per_slot` dispatches the per-slot programs
+        together - the grid sweep regains the OOOR zero-skipping (and
+        Booth/NAF recoding) the broadcast mode gave up, with per-slot
+        cycle counts matching `comefa_gemv` for the same recode.
+
+    Bit-identical per slot to G separate `comefa_gemv` calls in every
+    mode.  Pass `mesh` to shard the grid axis; a `stats` dict receives
+    the grid's modelled compute ``cycles`` (the per-slot lockstep /
+    makespan count - how the benchmark rows compare the two modes).
     """
     w = np.asarray(w)
     x = np.asarray(x)
     assert w.ndim == 3 and x.ndim == 2 and w.shape[0] == x.shape[0]
     assert w.shape[1] == x.shape[1]
     G, k, n = w.shape
+    if recode is not None:
+        return _comefa_gemv_per_slot(w, x, w_bits=w_bits, x_bits=x_bits,
+                                     acc_bits=acc_bits, optimized=optimized,
+                                     mesh=mesh, recode=recode, stats=stats)
     k_tile = gemv_batched_k_tile(w_bits, x_bits, acc_bits)
     if k_tile < 1:
         raise ValueError(
@@ -422,6 +458,46 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                              x_rows[j_local].base, x_bits)
         grid.run(_gemv_batched_chunk_program(plan, tile, x_rows,
                                              optimized=optimized))
+    if stats is not None:
+        stats["cycles"] = grid.cycles
+    out = np.empty((G, n), dtype=np.int64)
+    for g in range(G):
+        vals = layout.extract(grid.slot(g), plan.acc.base, acc_bits)
+        out[g] = vals.reshape(-1)[:n]
+    return out
+
+
+def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
+                          x_bits: int, acc_bits: int, optimized: bool,
+                          mesh, recode: str,
+                          stats: Optional[Dict] = None) -> np.ndarray:
+    """Per-slot-stream batched GEMV (`comefa_gemv_batched(recode=...)`).
+
+    Same `schedule.plan_gemv` geometry as the single-instance kernel (no
+    broadcast x rows needed - activations live in the instruction
+    streams), one shared symbolic chunk template, per-slot digit-stream
+    specialization, `run_per_slot` dispatch.
+    """
+    G, k, n = w.shape
+    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                              reserve_neg=ir_mod.recode_is_signed(recode))
+    nb, lanes = plan.n_blocks, N_COLS
+    pad = nb * lanes - n
+    grid = ComefaGrid(G, n_blocks=nb, mesh=mesh)
+    for tile in plan.tiles():
+        buf = plan.buffers[tile.buffer]
+        for g in range(G):
+            slot = grid.slot(g)
+            for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
+                wj = np.pad(w[g, j], (0, pad)).reshape(nb, lanes)
+                rows = buf.weight_rows(j_local, w_bits)
+                layout.place(slot, wj, rows.base, w_bits)
+        grid.run_per_slot([
+            plan.tile_program(tile, x[g, tile.k_start:tile.k_end],
+                              optimized=optimized, recode=recode)
+            for g in range(G)])
+    if stats is not None:
+        stats["cycles"] = grid.cycles
     out = np.empty((G, n), dtype=np.int64)
     for g in range(G):
         vals = layout.extract(grid.slot(g), plan.acc.base, acc_bits)

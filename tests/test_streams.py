@@ -1,0 +1,446 @@
+"""Streamed-operand IR: specialization bit-exactness vs the legacy eager
+generators, digit-recoder identities, recoded timing closed forms, and the
+per-slot grid specialization path.
+
+The tentpole contract under test: `ir.specialize_streams` over the
+symbolic `StreamedOperand` programs reproduces the legacy value-inspecting
+generators *instruction for instruction* (the frozen reference
+implementations live in this file), stays bit-exact on the simulator for
+every recoding, and the timing layer's recoded-digit closed forms match
+the generated programs cycle-exactly.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import example, given, settings, strategies as st
+except ImportError:
+    # no hypothesis in this environment (the container image has no pip):
+    # fall back to the deterministic seeded sampler (tests/_minihyp.py)
+    from _minihyp import example, given, settings, strategies as st
+
+from repro.core.comefa import (ComefaArray, ComefaGrid, N_COLS, ir, layout,
+                               program, schedule, timing)
+from repro.core.comefa.ir import (Program, RowAllocator, StreamMac,
+                                  StreamedOperand, specialize_streams)
+from repro.core.comefa.isa import TT_NOT_A, TT_XOR
+
+SEEDS = st.integers(0, 2**31 - 1)
+RECODES = ("naive", "booth", "naf")
+
+
+# ---------------------------------------------------------------------------
+# frozen legacy reference generators (the pre-IR eager implementations)
+# ---------------------------------------------------------------------------
+
+def _legacy_ooor_dot(weight_rows, x_values, x_bits, acc):
+    prog = Program()
+    prog += program.zero_rows(acc)
+    for j, xj in enumerate(x_values):
+        assert 0 <= xj < (1 << x_bits)
+        for b in range(x_bits):
+            if (xj >> b) & 1:
+                prog += program.add_into(acc, weight_rows[j], b)
+    return prog
+
+
+def _legacy_ooor_dot_booth(weight_rows, x_values, x_bits, acc, neg_scratch):
+    nw = len(weight_rows[0])
+    prog = program.zero_rows(acc)
+    for j, xj in enumerate(x_values):
+        w = weight_rows[j]
+        digits = ir.naf_digits(xj)
+        if any(d < 0 for d in digits):
+            prog += program.logic2(w, w, neg_scratch[:nw], TT_NOT_A)
+        for off, d in enumerate(digits):
+            if d == 0:
+                continue
+            if off + nw > len(acc):
+                break
+            if d > 0:
+                prog += program.add_into(acc, w, off)
+            else:
+                seg = list(acc[off:off + nw])
+                prog += program.preset_carry()
+                prog += program.add(seg, neg_scratch[:nw], seg, preset=True,
+                                    store_cout=False)
+                rem_rows = list(acc[off + nw:])
+                if rem_rows:
+                    prog += program.add_ext(rem_rows, [1] * len(rem_rows),
+                                            rem_rows, store_cout=False,
+                                            preset=True)
+    return prog
+
+
+def _dot_layout(k, wb, accb, with_neg):
+    a = RowAllocator()
+    w_rows = [a.alloc(wb) for _ in range(k)]
+    acc = a.alloc(accb)
+    neg = a.alloc(wb) if with_neg else None
+    return w_rows, acc, neg
+
+
+# ---------------------------------------------------------------------------
+# specialization bit-exactness vs the legacy eager generators
+# ---------------------------------------------------------------------------
+
+@given(k=st.sampled_from([1, 3, 5]), wb=st.sampled_from([3, 5, 8]),
+       xb=st.sampled_from([4, 6, 8]), seed=SEEDS)
+@settings(max_examples=12, deadline=None)
+@example(k=2, wb=4, xb=6, seed=0)
+def test_specialize_naive_matches_legacy_ooor_dot(k, wb, xb, seed):
+    rng = np.random.default_rng(seed)
+    accb = wb + xb + 6
+    x = [int(v) for v in rng.integers(0, 1 << xb, size=k)]
+    # worst cases ride along in every example: all-zero and all-ones
+    x[0] = 0
+    if k > 1:
+        x[-1] = (1 << xb) - 1
+    w_rows, acc, _ = _dot_layout(k, wb, accb, with_neg=False)
+    sym = program.ooor_dot_stream(w_rows, xb, acc)
+    got = specialize_streams(sym, x, recode="naive")
+    ref = _legacy_ooor_dot(w_rows, x, xb, acc)
+    assert got.instrs() == ref.instrs()
+    assert got.cycles == ref.cycles
+    # the public wrapper is the same specialization
+    assert program.ooor_dot(w_rows, x, xb, acc).instrs() == ref.instrs()
+
+
+@given(k=st.sampled_from([1, 3, 5]), wb=st.sampled_from([3, 5]),
+       xb=st.sampled_from([4, 6, 8]), seed=SEEDS)
+@settings(max_examples=12, deadline=None)
+@example(k=3, wb=5, xb=6, seed=0)
+def test_specialize_naf_matches_legacy_ooor_dot_booth(k, wb, xb, seed):
+    rng = np.random.default_rng(seed)
+    accb = wb + xb + 6
+    x = [int(v) for v in rng.integers(0, 1 << xb, size=k)]
+    x[0] = (1 << xb) - 1                    # all-ones: the NAF showcase
+    if k > 1:
+        x[1] = 0                            # all-zero: no digits at all
+    w_rows, acc, neg = _dot_layout(k, wb, accb, with_neg=True)
+    sym = program.ooor_dot_stream(w_rows, xb, acc, neg_scratch=neg)
+    got = specialize_streams(sym, x, recode="naf")
+    ref = _legacy_ooor_dot_booth(w_rows, x, xb, acc, neg)
+    assert got.instrs() == ref.instrs()
+    assert program.ooor_dot_booth(w_rows, x, xb, acc, neg).instrs() \
+        == ref.instrs()
+
+
+def test_stream_ext_roundtrip_matches_eager_forms():
+    """add_ext_stream / logic_ext_stream specialize to the eager programs."""
+    a = RowAllocator()
+    src = a.alloc(8)
+    dst = a.alloc(9)
+    dst2 = a.alloc(8)
+    stream = StreamedOperand(0, 8, "c", digit_set="binary")
+    for v in (0, 0x5A, 0xFF):
+        bits = [(v >> i) & 1 for i in range(8)]
+        got = specialize_streams(
+            program.add_ext_stream(src, stream, dst), [v])
+        assert got.instrs() == program.add_ext(src, bits, dst).instrs()
+        got = specialize_streams(
+            program.logic_ext_stream(src, dst2, TT_XOR, stream), [v])
+        assert got.instrs() == program.logic_ext(src, dst2, TT_XOR,
+                                                 bits).instrs()
+
+
+def test_fir_stream_specializes_to_legacy_fir():
+    a = RowAllocator()
+    taps = a.alloc(5)
+    acc = a.alloc(18)
+    xs = [0, 63, 21, 40]
+    sym = program.fir_stream(taps, acc, len(xs), 6)
+    got = specialize_streams(sym, xs, recode="naive")
+    # frozen legacy shape: zero + per sample (adds per set bit, then shift)
+    ref = program.zero_rows(acc)
+    for x_t in xs:
+        for b in range(6):
+            if (x_t >> b) & 1:
+                ref += program.add_into(acc, taps, b)
+        ref += program.shift_lanes(acc, acc, left=True)
+    assert got.instrs() == ref.instrs()
+
+
+# ---------------------------------------------------------------------------
+# symbolic-program guards + specialization validation
+# ---------------------------------------------------------------------------
+
+def test_symbolic_program_refuses_concrete_operations():
+    a = RowAllocator()
+    w_rows, acc, _ = _dot_layout(2, 4, 14, with_neg=False)
+    sym = program.ooor_dot_stream(w_rows, 4, acc)
+    assert sym.is_symbolic
+    assert [s.index for s in sym.streams()] == [0, 1]
+    for fn in (lambda: sym.cycles, lambda: sym.encode(),
+               lambda: sym.optimize(), lambda: sym.instrs()):
+        with pytest.raises(ValueError, match="symbolic"):
+            fn()
+    arr = ComefaArray()
+    with pytest.raises(ValueError, match="symbolic"):
+        arr.run(sym)
+
+
+def test_specialize_validation_errors():
+    w_rows, acc, _ = _dot_layout(2, 4, 14, with_neg=False)
+    sym = program.ooor_dot_stream(w_rows, 4, acc)
+    with pytest.raises(ValueError, match="stream index"):
+        specialize_streams(sym, [1])            # too few values
+    with pytest.raises(ValueError, match="out of range"):
+        specialize_streams(sym, [1, 16])        # 16 >= 2^4
+    # signed recoding without a complement scratch region must refuse
+    with pytest.raises(ValueError, match="neg"):
+        specialize_streams(sym, [1, 7], recode="naf")
+    with pytest.raises(ValueError, match="unknown recode"):
+        specialize_streams(sym, [1, 2], recode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# digit recoders: identities + statistics
+# ---------------------------------------------------------------------------
+
+@given(xb=st.sampled_from([1, 4, 8, 11]), seed=SEEDS)
+@settings(max_examples=20, deadline=None)
+@example(xb=8, seed=0)
+def test_recoder_identities(xb, seed):
+    rng = np.random.default_rng(seed)
+    vals = {0, (1 << xb) - 1, int(rng.integers(0, 1 << xb))}
+    for x in vals:
+        for rc in RECODES:
+            ds = ir.recode_digits(x, xb, rc)
+            assert sum(d << i for i, d in enumerate(ds)) == x
+            assert all(d in (-1, 0, 1) for d in ds)
+        naf = ir.naf_digits(x)
+        # non-adjacent + never denser than binary
+        assert all(not (p and q) for p, q in zip(naf, naf[1:]))
+        assert sum(1 for d in naf if d) <= bin(x).count("1")
+        assert ir.recode_digits(x, xb, "naive") == \
+            [(x >> i) & 1 for i in range(xb)]
+
+
+@pytest.mark.parametrize("n", [3, 6, 9])
+@pytest.mark.parametrize("rc", RECODES)
+def test_expected_nonzero_digits_is_exact_enumeration(n, rc):
+    mean = np.mean([sum(1 for d in ir.recode_digits(x, n, rc) if d)
+                    for x in range(1 << n)])
+    assert timing.expected_nonzero_digits(n, rc) == pytest.approx(mean)
+
+
+def test_digit_densities_and_speedups():
+    # naive density is exactly n/2 -> the paper's reported ~2x OOOR factor
+    assert timing.zero_skip_speedup(8, "naive") == 2.0
+    assert timing.zero_skip_speedup(16, "naive") == 2.0
+    # NAF approaches the n/3 + 4/9 asymptote and beats naive density
+    for n in (8, 16):
+        naf = timing.expected_nonzero_digits(n, "naf")
+        assert naf < n / 2
+        assert abs(naf - (n / 3 + 4 / 9)) < 0.05
+    # classic Booth averages (n+1)/2 on uniform operands - denser than
+    # binary (its win is runs, not averages), exactly as documented
+    assert timing.expected_nonzero_digits(8, "booth") == 4.5
+    # runs of ones: booth/naf collapse to 2 digits where popcount pays 6
+    x = 0b0111111
+    assert sum(1 for d in ir.recode_digits(x, 8, "booth") if d) == 2
+    assert sum(1 for d in ir.recode_digits(x, 8, "naf") if d) == 2
+
+
+# ---------------------------------------------------------------------------
+# recoded timing closed forms: cycle-exact vs generated programs
+# ---------------------------------------------------------------------------
+
+@given(k=st.sampled_from([1, 2, 4]), wb=st.sampled_from([4, 6]),
+       xb=st.sampled_from([4, 8]), rc=st.sampled_from(list(RECODES)),
+       seed=SEEDS)
+@settings(max_examples=16, deadline=None)
+@example(k=2, wb=4, xb=8, rc="naf", seed=0)
+def test_ooor_dot_cycles_exact_per_recode(k, wb, xb, rc, seed):
+    rng = np.random.default_rng(seed)
+    accb = wb + xb + 5
+    x = [int(v) for v in rng.integers(0, 1 << xb, size=k)]
+    x[0] = (1 << xb) - 1
+    w_rows, acc, neg = _dot_layout(k, wb, accb, with_neg=True)
+    sym = program.ooor_dot_stream(w_rows, xb, acc, neg_scratch=neg)
+    p = specialize_streams(sym, x, recode=rc)
+    assert p.cycles == timing.ooor_dot_cycles(k, wb, xb, accb, recode=rc,
+                                              x_values=x)
+
+
+@pytest.mark.parametrize("rc", RECODES)
+def test_fir_cycles_exact_per_recode(rc):
+    rng = np.random.default_rng(5)
+    tb, xb, accb = 5, 6, 20
+    xs = [int(v) for v in rng.integers(0, 1 << xb, size=4)]
+    xs[0], xs[-1] = 0, (1 << xb) - 1
+    a = RowAllocator()
+    taps, acc, neg = a.alloc(tb), a.alloc(accb), a.alloc(tb)
+    p = program.fir(taps, acc, xs, xb, recode=rc,
+                    neg_scratch=None if rc == "naive" else neg)
+    assert p.cycles == timing.fir_cycles(len(xs), xb, accb, x_values=xs,
+                                         recode=rc, tap_bits=tb)
+
+
+def test_ooor_dot_cycles_estimate_recode_aware():
+    naive = timing.ooor_dot_cycles(8, 8, 8, 27)
+    naf = timing.ooor_dot_cycles(8, 8, 8, 27, recode="naf")
+    dense = timing.ooor_dot_cycles(8, 8, 8, 27, zero_skip=False)
+    assert naf < naive < dense
+
+
+# ---------------------------------------------------------------------------
+# simulator bit-exactness of recoded schedules (incl. pass-pipeline folding)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rc", RECODES)
+def test_recoded_dot_bit_exact_and_optimizable(rc):
+    rng = np.random.default_rng(9)
+    k, wb, xb, accb = 3, 5, 6, 24
+    w = np.stack([rng.integers(0, 1 << wb, size=N_COLS) for _ in range(k)])
+    x = np.array([(1 << xb) - 1, 0, 37])
+    w_rows, acc, neg = _dot_layout(k, wb, accb, with_neg=True)
+    sym = program.ooor_dot_stream(w_rows, xb, acc, neg_scratch=neg)
+    prog = specialize_streams(sym, [int(v) for v in x], recode=rc)
+    expect = (w * x[:, None]).sum(axis=0)
+    for p in (prog, prog.optimize()):
+        arr = ComefaArray()
+        for j in range(k):
+            layout.place(arr, w[j], w_rows[j].base, wb)
+        arr.run(p)
+        np.testing.assert_array_equal(
+            layout.extract(arr, acc.base, accb, block=0), expect)
+    # W2 riders still pack after specialization: the zeroing prologue
+    # and carry stores co-issue, so the optimized form is never longer
+    assert prog.optimize().cycles < prog.cycles
+
+
+@pytest.mark.parametrize("rc", RECODES)
+def test_comefa_gemv_recoded_bit_exact(rc):
+    from repro.kernels import comefa_sim
+    rng = np.random.default_rng(21)
+    k, n = 11, 170
+    w = rng.integers(0, 32, size=(k, n))
+    x = rng.integers(0, 32, size=k)
+    got = comefa_sim.comefa_gemv(w, x, w_bits=5, x_bits=5, acc_bits=24,
+                                 recode=rc)
+    np.testing.assert_array_equal(got, (w * x[:, None]).sum(0))
+
+
+def test_comefa_fir_recoded_bit_exact():
+    from repro.kernels import comefa_sim
+    rng = np.random.default_rng(23)
+    taps = rng.integers(0, 16, size=170)          # 2 chained blocks
+    xs = rng.integers(0, 16, size=5)
+    ref = [sum(int(taps[j]) * int(xs[t - j]) for j in range(t + 1))
+           for t in range(len(xs))]
+    for rc in RECODES:
+        y = comefa_sim.comefa_fir(taps, xs, tap_bits=4, x_bits=4, recode=rc)
+        np.testing.assert_array_equal(y, ref)
+
+
+# ---------------------------------------------------------------------------
+# per-slot grid specialization (the regained zero-skipping)
+# ---------------------------------------------------------------------------
+
+@given(seed=SEEDS)
+@settings(max_examples=4, deadline=None)
+def test_run_per_slot_bit_identical_to_arrays(seed):
+    """Different-length per-slot programs == independent per-array runs,
+    with per-slot cycle counts and makespan accounting."""
+    rng = np.random.default_rng(seed)
+    n = 4
+    progs = [
+        program.mul(list(range(n)), list(range(n, 2 * n)),
+                    list(range(2 * n, 4 * n))),
+        program.add(list(range(n)), list(range(n, 2 * n)),
+                    list(range(2 * n, 3 * n + 1))),
+        program.zero_rows(list(range(3 * n, 3 * n + 2))),
+    ]
+    arrays = [ComefaArray(n_blocks=2) for _ in progs]
+    grid = ComefaGrid(len(progs), n_blocks=2)
+    for i, arr in enumerate(arrays):
+        vals = rng.integers(0, 1 << n, size=(2, N_COLS))
+        for tgt in (arr, grid.slot(i)):
+            layout.place(tgt, vals, 0, n)
+            layout.place(tgt, vals ^ 3, n, n)
+    counts = grid.run_per_slot(progs)
+    assert grid.cycles == max(counts)
+    for i, arr in enumerate(arrays):
+        assert arr.run(progs[i]) == counts[i]
+        np.testing.assert_array_equal(grid.mem[i], arr.mem)
+        np.testing.assert_array_equal(grid.carry[i], arr.carry)
+        np.testing.assert_array_equal(grid.mask[i], arr.mask)
+
+
+@pytest.mark.parametrize("rc", ["naive", "naf"])
+def test_comefa_gemv_batched_per_slot_bit_exact(rc):
+    from repro.kernels import comefa_sim
+    rng = np.random.default_rng(31)
+    g, k, n, wb, xb = 3, 9, 170, 4, 5
+    w = rng.integers(0, 1 << wb, size=(g, k, n))
+    x = rng.integers(0, 1 << xb, size=(g, k))
+    got = comefa_sim.comefa_gemv_batched(w, x, w_bits=wb, x_bits=xb,
+                                         acc_bits=22, recode=rc)
+    for i in range(g):
+        ref = comefa_sim.comefa_gemv(w[i], x[i], w_bits=wb, x_bits=xb,
+                                     acc_bits=22, recode=rc)
+        np.testing.assert_array_equal(got[i], ref)
+        np.testing.assert_array_equal(
+            got[i], w[i].T.astype(np.int64) @ x[i].astype(np.int64))
+
+
+def test_per_slot_cycles_beat_mask_program_on_sparse_activations():
+    """Acceptance: the per-slot specialization path's cycle counts drop
+    below the PR-4 mask-predicated value-independent program for
+    sparse-bit activations (the zero-skipping the grid sweep regains)."""
+    from repro.kernels import comefa_sim
+    rng = np.random.default_rng(37)
+    g, k, n, wb, xb = 3, 8, 160, 4, 6
+    w = rng.integers(0, 1 << wb, size=(g, k, n))
+    x = (1 << rng.integers(0, xb, size=(g, k))).astype(np.int64)  # 1 set bit
+    ref = np.einsum("gkn,gk->gn", w, x)
+    stats_mask, stats_naive, stats_naf = {}, {}, {}
+    got = comefa_sim.comefa_gemv_batched(w, x, w_bits=wb, x_bits=xb,
+                                         acc_bits=20, stats=stats_mask)
+    np.testing.assert_array_equal(got, ref)
+    for rc, stats in (("naive", stats_naive), ("naf", stats_naf)):
+        got = comefa_sim.comefa_gemv_batched(w, x, w_bits=wb, x_bits=xb,
+                                             acc_bits=20, recode=rc,
+                                             stats=stats)
+        np.testing.assert_array_equal(got, ref)
+        assert stats["cycles"] < stats_mask["cycles"], (rc, stats)
+
+
+# ---------------------------------------------------------------------------
+# perf-model wiring: OOOR priced from digit statistics, not literals
+# ---------------------------------------------------------------------------
+
+def test_perf_prices_ooor_from_digit_statistics():
+    from repro.core.fpga_model import perf
+    # the closed form still reproduces the paper point (naive factor is
+    # *derived* as exactly 2.0, not hard-coded)
+    got = perf.gemv("comefa-d").speedup
+    assert abs(got - perf.PAPER_SPEEDUPS["gemv"]["comefa-d"]) < 0.15
+    # NAF-recoded achieved schedule beats the naive achieved schedule
+    naive = perf.gemv("comefa-d", achieved=True).speedup
+    naf = perf.gemv("comefa-d", achieved=True, recode="naf").speedup
+    assert naf > naive > 1.0
+
+
+def test_perf_source_has_no_literal_ooor_halving():
+    """The seed-era OOOR `/ 2` factors must stay gone: every factor
+    derives from `timing.zero_skip_speedup` (digit statistics)."""
+    import inspect
+    import io
+    import re
+    import tokenize
+
+    from repro.core.fpga_model import perf
+    src = inspect.getsource(perf)
+    code = " ".join(
+        tok.string for tok in tokenize.generate_tokens(
+            io.StringIO(src).readline)
+        if tok.type not in (tokenize.STRING, tokenize.COMMENT))
+    # `40 / 2.0` (raid's dual-port word cost, unrelated to OOOR) escapes
+    # the pattern via its decimal point; any bare `/ 2` is an OOOR literal
+    hits = [code[max(0, m.start() - 40):m.end() + 20]
+            for m in re.finditer(r"/\s*2(?![0-9.])", code)]
+    assert not hits, hits
+    assert "zero_skip_speedup" in src
