@@ -1,0 +1,78 @@
+"""Gate nightly sim-speed results against the committed baseline.
+
+Compares the wall-clock (``us_per_call``) rows of a fresh
+``sim_speed.py --json`` run against ``benchmarks/baselines/sim_speed.json``
+and exits non-zero when any gated row regressed beyond the tolerance -
+the backstop that keeps the packed-engine speedup from silently eroding.
+
+Only rows matching the gate pattern (default ``sim/grid_g8_``) with a
+nonzero baseline wall-clock are compared: cycle counts and derived ratios
+are deterministic (covered by tests), and sub-pattern rows on shared CI
+runners are too noisy to gate individually.  New rows present only on one
+side are reported but never fail the gate, so adding a benchmark doesn't
+require a lockstep baseline update.
+
+Usage:
+    python benchmarks/check_regression.py sim-speed.json \
+        [--baseline benchmarks/baselines/sim_speed.json] \
+        [--pattern sim/grid_g8_] [--tolerance 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _wallclock_rows(payload: dict, pattern: str) -> dict:
+    return {r["name"]: r["us_per_call"] for r in payload["rows"]
+            if r["name"].startswith(pattern) and r["us_per_call"] > 0}
+
+
+def check(current: dict, baseline: dict, pattern: str,
+          tolerance: float) -> list:
+    """Return the list of (name, base_us, cur_us, ratio) regressions."""
+    base = _wallclock_rows(baseline, pattern)
+    cur = _wallclock_rows(current, pattern)
+    regressions = []
+    for name in sorted(base.keys() | cur.keys()):
+        if name not in base or name not in cur:
+            side = "baseline" if name not in cur else "current run"
+            print(f"  note: {name} missing from {side} (not gated)")
+            continue
+        ratio = cur[name] / base[name]
+        status = "REGRESSED" if ratio > 1 + tolerance else "ok"
+        print(f"  {status:9s} {name}: {base[name]:.1f}us -> "
+              f"{cur[name]:.1f}us ({ratio:.2f}x)")
+        if ratio > 1 + tolerance:
+            regressions.append((name, base[name], cur[name], ratio))
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh sim_speed.py --json output")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/sim_speed.json")
+    ap.add_argument("--pattern", default="sim/grid_g8_",
+                    help="gate rows whose name starts with this prefix")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional slowdown (0.25 = +25%%)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    print(f"gating '{args.pattern}*' wall-clock rows at "
+          f"+{args.tolerance:.0%}:")
+    regressions = check(current, baseline, args.pattern, args.tolerance)
+    if regressions:
+        print(f"FAIL: {len(regressions)} row(s) regressed beyond "
+              f"+{args.tolerance:.0%}")
+        return 1
+    print("all gated rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

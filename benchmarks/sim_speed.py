@@ -9,6 +9,8 @@ Reports, for the representative add / mul / OOOR-dot programs:
     vs. the first call - demonstrating that the encode cache eliminates
     re-encoding on repeated kernel invocations;
   * `run_programs` batching: N programs in one `lax.scan` dispatch;
+  * execution engines: the fused G=8 grid dispatch on the uint8
+    reference scan vs the bit-packed uint32 engine (`engine="packed"`);
   * the tiled GEMM: LCU-overlapped vs serial-phase schedule cycles and
     the sim-backed `comefa_gemm` wall-clock.
 
@@ -19,6 +21,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core.comefa import (ComefaArray, block, layout, plan_gemm,
@@ -31,6 +34,13 @@ def _bench(fn, *, reps=10):
     for _ in range(reps):
         fn()
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _run_synced(sim, prog) -> None:
+    """`sim.run(prog)` plus a device fence - state is lazily
+    device-resident now, so an unfenced run() only measures dispatch."""
+    sim.run(prog)
+    jax.block_until_ready(sim._dev)
 
 
 def run(rows: list) -> None:
@@ -61,8 +71,8 @@ def run(rows: list) -> None:
     for name, mk in (("mul8", mk_mul), ("add8", mk_add), ("dot", mk_dot)):
         raw = mk()
         opt = raw.optimize()
-        us_raw = _bench(lambda: arr.run(raw))
-        us_opt = _bench(lambda: arr.run(opt))
+        us_raw = _bench(lambda: _run_synced(arr, raw))
+        us_opt = _bench(lambda: _run_synced(arr, opt))
         rows.append((f"sim/{name}_cycles_unopt", 0.0, raw.cycles, None))
         rows.append((f"sim/{name}_cycles_coissue", 0.0, opt.cycles, None))
         rows.append((f"sim/{name}_us_unopt", us_raw, us_raw, None))
@@ -70,7 +80,7 @@ def run(rows: list) -> None:
 
     lanes = 8 * 160
     opt_mul = mk_mul().optimize()
-    us = _bench(lambda: arr.run(opt_mul))
+    us = _bench(lambda: _run_synced(arr, opt_mul))
     rows.append(("sim/mul8_results_per_s", us, lanes / (us / 1e6), None))
 
     # encode cache: rebuilding a structurally equal program and running it
@@ -78,11 +88,11 @@ def run(rows: list) -> None:
     block._ENCODE_CACHE.clear()
     block.ENCODE_CACHE_STATS.update(hits=0, misses=0)
     t0 = time.perf_counter()
-    arr.run(mk_mul())                       # first call: encodes
+    _run_synced(arr, mk_mul())              # first call: encodes
     first_us = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(5):
-        arr.run(mk_mul())                   # rebuilt fresh: cache hits
+        _run_synced(arr, mk_mul())          # rebuilt fresh: cache hits
     repeat_us = (time.perf_counter() - t0) / 5 * 1e6
     rows.append(("sim/mul8_first_call_us", first_us, first_us, None))
     rows.append(("sim/mul8_repeat_call_us", repeat_us, repeat_us, None))
@@ -91,8 +101,10 @@ def run(rows: list) -> None:
 
     # run_programs: one scan dispatch for a batch of programs
     progs = [mk_add().optimize() for _ in range(8)]
-    us_loop = _bench(lambda: [arr.run(p) for p in progs])
-    us_batch = _bench(lambda: arr.run_programs(progs))
+    us_loop = _bench(lambda: ([arr.run(p) for p in progs],
+                              jax.block_until_ready(arr._dev)))
+    us_batch = _bench(lambda: (arr.run_programs(progs),
+                               jax.block_until_ready(arr._dev)))
     rows.append(("sim/add8_x8_looped_us", us_loop, us_loop, None))
     rows.append(("sim/add8_x8_batched_us", us_batch, us_batch, None))
 
@@ -111,8 +123,9 @@ def run(rows: list) -> None:
             layout.place(ga, av, 0, n)
             layout.place(ga, bv, n, n)
         gridarr = ComefaGrid.from_arrays(arrays)
-        us_gloop = _bench(lambda: [ga.run(grid_prog) for ga in arrays])
-        us_fused = _bench(lambda: gridarr.run(grid_prog))
+        us_gloop = _bench(lambda: [_run_synced(ga, grid_prog)
+                                   for ga in arrays])
+        us_fused = _bench(lambda: _run_synced(gridarr, grid_prog))
         rows.append((f"sim/grid_g{g}_loop_us", us_gloop, us_gloop, None))
         rows.append((f"sim/grid_g{g}_fused_us", us_fused, us_fused, None))
         rows.append((f"sim/grid_g{g}_fused_speedup", 0.0,
@@ -122,6 +135,43 @@ def run(rows: list) -> None:
     from repro.core.fpga_model import perf
     rows.append(("sim/grid_g8_hw_speedup_comefa_d", 0.0,
                  perf.gemv_grid("comefa-d", g=8).speedup, None))
+
+    # execution engines: the same fused grid dispatch on the uint8
+    # reference scan vs the bit-packed uint32 engine, at a
+    # fleet-representative working set (G=8 slots x 8 blocks, 16-bit
+    # mul, 280 cycles).  The reference moves 8x the bytes the state
+    # holds; at this state size its per-step update also scales worse
+    # than bandwidth, so the packed engine clears 10x with room.
+    n16 = 16
+    mul16 = program.mul(list(range(n16)), list(range(n16, 2 * n16)),
+                        list(range(2 * n16, 4 * n16))).optimize()
+
+    def _engine_grid(engine):
+        egrid = ComefaGrid(8, n_blocks=8, engine=engine)
+        for g in range(8):
+            slot = egrid.slot(g)
+            layout.place(slot, rng.integers(0, 1 << n16, size=(8, 160)),
+                         0, n16)
+            layout.place(slot, rng.integers(0, 1 << n16, size=(8, 160)),
+                         n16, n16)
+        return egrid
+
+    ref_grid = _engine_grid("reference")
+    us_eng_ref = _bench(lambda: _run_synced(ref_grid, mul16), reps=3)
+    packed_grid = _engine_grid("packed")
+    us_eng_packed = _bench(lambda: _run_synced(packed_grid, mul16), reps=3)
+    rows.append(("sim/grid_g8_engine_reference_us", us_eng_ref,
+                 us_eng_ref, None))
+    rows.append(("sim/grid_g8_engine_packed_us", us_eng_packed,
+                 us_eng_packed, None))
+    rows.append(("sim/grid_g8_engine_packed_speedup", 0.0,
+                 us_eng_ref / us_eng_packed, None))
+    # informational: the Pallas kernel runs interpret-mode off-TPU, where
+    # it emulates rather than accelerates - one rep, not a criterion row
+    pallas_grid = _engine_grid("pallas")
+    us_eng_pallas = _bench(lambda: _run_synced(pallas_grid, mul16), reps=1)
+    rows.append(("sim/grid_g8_engine_pallas_interpret_us", us_eng_pallas,
+                 us_eng_pallas, None))
 
     # modelled CoMeFa-D hardware time for the same program, for scale
     hw_us = timing.mul_cycles(n) / 588e6 * 1e6
@@ -149,7 +199,7 @@ def run(rows: list) -> None:
     scratch = list(range(rb + total, 2 * (rb + total) - 1))
     red_prog = program.reduce_to_scalar(val, scratch, rb,
                                         n_blocks=nb2).optimize()
-    us_red = _bench(lambda: red_arr.run(red_prog), reps=3)
+    us_red = _bench(lambda: _run_synced(red_arr, red_prog), reps=3)
     rows.append(("sim/chain_reduce_nb2_us", us_red, us_red, None))
 
     # streamed-operand recoding: GEMV chunk compute cycles under naive /

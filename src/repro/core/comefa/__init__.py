@@ -1,7 +1,7 @@
 """CoMeFa compute-in-memory RAM: ISA, IR, bit-level simulator, programs,
 tiled LCU scheduling, timing."""
-from . import grid, ir, isa, layout, program, schedule, timing
-from .block import ComefaArray, ROW_ONES, ROW_ZEROS
+from . import engine_packed, grid, ir, isa, layout, program, schedule, timing
+from .block import ComefaArray, ROW_ONES, ROW_ZEROS, get_engine
 from .grid import ComefaGrid, grid_mesh, grid_shardings
 from .ir import (Operand, Program, RowAllocator, StreamedOperand,
                  specialize_streams)
@@ -11,7 +11,8 @@ from .program import ProgramBuilder
 from .schedule import GemmPlan, GemvPlan, Schedule, plan_gemm, plan_gemv
 
 __all__ = [
-    "grid", "ir", "isa", "layout", "program", "schedule", "timing",
+    "engine_packed", "grid", "ir", "isa", "layout", "program", "schedule",
+    "timing", "get_engine",
     "ComefaArray", "ComefaGrid", "grid_mesh", "grid_shardings",
     "Instr", "Program", "ProgramBuilder", "RowAllocator", "Operand",
     "StreamedOperand", "specialize_streams",

@@ -37,10 +37,18 @@ Programs are executed through a keyed encode cache: `run()` accepts an
 a pre-encoded matrix, and repeated invocations of structurally equal
 programs skip re-encoding entirely.  `run_programs()` concatenates several
 programs into a single `lax.scan` dispatch.
+
+Execution is pluggable (`ComefaArray(engine=...)` / `REPRO_COMEFA_ENGINE`):
+the uint8 scan below stays the bit-for-bit reference; `engine_packed`
+provides uint32 bit-packed engines (pure-XLA and Pallas) that are ~an
+order of magnitude faster and pinned identical by `tests/test_engines.py`.
+State lives on device between dispatches and materializes to numpy lazily,
+only when a port read / lane access / `layout` placement needs host memory.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import List, Optional, Sequence
 
 import jax
@@ -207,13 +215,83 @@ def _run(mem, carry, mask, prog, chain: bool):
     return mem, carry, mask
 
 
+@functools.partial(jax.jit, static_argnames=("chain",))
+def _run_slotwise(mem, carry, mask, progs, chain: bool):
+    """Per-slot program dispatch: slot g scans its OWN ``progs[g]``.
+
+    Models one instruction FSM *per grid slice* instead of the shared
+    broadcast (`grid.ComefaGrid.run_per_slot`).  The leading axis must be
+    vmapped here - instruction fields differ across slots, so it is no
+    longer an elementwise dimension.
+    """
+    def one(m, c, k, p):
+        (m, c, k), _ = jax.lax.scan(
+            functools.partial(_step, chain), (m, c, k), p)
+        return m, c, k
+
+    return jax.vmap(one)(mem, carry, mask, progs)
+
+
+# ---------------------------------------------------------------------------
+# execution engines: the strategy ComefaArray/ComefaGrid dispatch through
+# ---------------------------------------------------------------------------
+
+class _ReferenceEngine:
+    """The uint8 one-lane-per-bit scan above - the semantic ground truth.
+
+    Engine protocol (shared with `engine_packed`): `to_device` lifts host
+    uint8 state into the engine's device representation, `run` /
+    `run_per_slot` advance it (device-to-device, no host copies), and
+    `to_host` materializes writable numpy uint8 state back.
+    """
+
+    name = "reference"
+
+    def to_device(self, mem, carry, mask):
+        return (jnp.asarray(mem), jnp.asarray(carry), jnp.asarray(mask))
+
+    def to_host(self, state):
+        # np.array (not asarray): jax hands back read-only views of its
+        # device buffers, and callers mutate the result in place (port
+        # writes, `layout` placements between runs)
+        return tuple(np.array(x) for x in state)
+
+    def run(self, state, prog, chain: bool):
+        return _run(*state, prog, chain)
+
+    def run_per_slot(self, state, progs, chain: bool):
+        return _run_slotwise(*state, progs, chain)
+
+
+_REFERENCE_ENGINE = _ReferenceEngine()
+
+
+def get_engine(name=None):
+    """Resolve an engine spec to an engine object.
+
+    ``None`` consults ``REPRO_COMEFA_ENGINE`` (default ``"reference"``);
+    a string picks ``reference`` here or defers to
+    `engine_packed.get_engine` for ``packed`` / ``packed-xla`` /
+    ``pallas``; an engine object passes through (so arrays can share one).
+    """
+    if name is None:
+        name = os.environ.get("REPRO_COMEFA_ENGINE", "reference")
+    if not isinstance(name, str):
+        return name
+    if name == "reference":
+        return _REFERENCE_ENGINE
+    from . import engine_packed      # deferred: optional Pallas dep inside
+    return engine_packed.get_engine(name)
+
+
 # ---------------------------------------------------------------------------
 # keyed encode cache: structurally-equal programs encode once
 # ---------------------------------------------------------------------------
 
 _ENCODE_CACHE: dict = {}
 _ENCODE_CACHE_MAX = 512
-ENCODE_CACHE_STATS = {"hits": 0, "misses": 0}
+ENCODE_CACHE_STATS = {"hits": 0, "misses": 0,
+                      "device_hits": 0, "device_misses": 0}
 
 
 def _encode_cached(key, producer) -> np.ndarray:
@@ -270,24 +348,117 @@ def encoded(program) -> np.ndarray:
     return _encode_cached(instrs, lambda: encode_program(instrs))
 
 
-class ComefaArray:
-    """An array of CoMeFa RAM blocks driven by one instruction stream."""
+# device-side companion to the encode cache: the frozen host matrix used
+# to be re-uploaded via jnp.asarray on EVERY dispatch; cache the device
+# array per matrix so repeated runs of the same program skip the transfer
+_DEVICE_MAT_CACHE: dict = {}
+_DEVICE_MAT_CACHE_MAX = 512
 
-    def __init__(self, n_blocks: int = 1, chain: bool = False):
+
+def device_mat(mat: np.ndarray):
+    """Device-side copy of an encoded program matrix, cached when safe.
+
+    Only *frozen* matrices cache - exactly the encode-cache residents
+    (`_encode_cached` calls ``setflags(write=False)``) and anything else
+    a caller deliberately froze.  A writable matrix may be mutated or
+    garbage-collected after this call, so it uploads fresh each time
+    (temporary `_concat_encoded` / `run_per_slot` stacks take this path).
+    Entries key on ``id(mat)`` and hold a strong reference to the host
+    matrix, so an id can never be recycled out from under its entry;
+    FIFO eviction bounds both caches the same way.
+    """
+    if mat.flags.writeable:
+        return jnp.asarray(mat)
+    entry = _DEVICE_MAT_CACHE.get(id(mat))
+    if entry is not None:
+        ENCODE_CACHE_STATS["device_hits"] += 1
+        return entry[1]
+    ENCODE_CACHE_STATS["device_misses"] += 1
+    dev = jnp.asarray(mat)
+    if len(_DEVICE_MAT_CACHE) >= _DEVICE_MAT_CACHE_MAX:
+        _DEVICE_MAT_CACHE.pop(next(iter(_DEVICE_MAT_CACHE)))
+    _DEVICE_MAT_CACHE[id(mat)] = (mat, dev)
+    return dev
+
+
+class ComefaArray:
+    """An array of CoMeFa RAM blocks driven by one instruction stream.
+
+    `engine` selects the execution engine (`get_engine`): the uint8
+    reference scan (default), or the bit-packed ``"packed"`` /
+    ``"packed-xla"`` / ``"pallas"`` engines from `engine_packed`; the env
+    var ``REPRO_COMEFA_ENGINE`` overrides the default.  State stays
+    device-resident between dispatches: `run(); run()` chains device
+    buffers with no host round-trip, and the numpy ``mem``/``carry``/
+    ``mask`` views materialize lazily on first host access (port words,
+    lane helpers, `layout` placements).  `host_syncs` / `device_puts`
+    count those boundary crossings - the regression tests pin them.
+    """
+
+    def __init__(self, n_blocks: int = 1, chain: bool = False, engine=None):
         self.n_blocks = n_blocks
         self.chain = chain
+        self.engine = get_engine(engine)
         self.cycles = 0           # cycles spent in compute (hybrid) mode
         self.io_words = 0         # 40-bit words moved through the ports
         self.reset()
 
     # -- state ------------------------------------------------------------
     def reset(self):
-        self.mem = np.zeros((self.n_blocks, N_ROWS, N_COLS), dtype=np.uint8)
-        self.carry = np.zeros((self.n_blocks, N_COLS), dtype=np.uint8)
-        self.mask = np.zeros((self.n_blocks, N_COLS), dtype=np.uint8)
-        self.mem[:, ROW_ONES, :] = 1
+        mem = np.zeros((self.n_blocks, N_ROWS, N_COLS), dtype=np.uint8)
+        mem[:, ROW_ONES, :] = 1
+        self._mem = mem
+        self._carry = np.zeros((self.n_blocks, N_COLS), dtype=np.uint8)
+        self._mask = np.zeros((self.n_blocks, N_COLS), dtype=np.uint8)
+        self._dev = None          # engine-format device state, when ahead
         self.cycles = 0
         self.io_words = 0
+        self.host_syncs = 0       # device->host state materializations
+        self.device_puts = 0      # host->device state uploads
+
+    def _sync_host(self):
+        """Materialize device state to numpy (and drop the device copy).
+
+        Dropping is deliberate: every host access hands out a *writable*
+        array that callers mutate in place (port writes, placements), so
+        a retained device copy could silently go stale.  Repeated host
+        accesses after one sync are free; the next dispatch re-uploads.
+        """
+        if self._dev is not None:
+            self._mem, self._carry, self._mask = self.engine.to_host(
+                self._dev)
+            self._dev = None
+            self.host_syncs += 1
+
+    @property
+    def mem(self) -> np.ndarray:
+        self._sync_host()
+        return self._mem
+
+    @mem.setter
+    def mem(self, value):
+        self._sync_host()         # keep carry/mask coherent before replacing
+        self._mem = np.asarray(value)
+
+    @property
+    def carry(self) -> np.ndarray:
+        self._sync_host()
+        return self._carry
+
+    @carry.setter
+    def carry(self, value):
+        self._sync_host()
+        self._carry = np.asarray(value)
+
+    @property
+    def mask(self) -> np.ndarray:
+        self._sync_host()
+        return self._mask
+
+    @mask.setter
+    def mask(self, value):
+        self._sync_host()
+        self._mask = np.asarray(value)
 
     # -- hybrid-mode logical port access (512 x 40, column mux 4) ---------
     def write_word(self, block: int, addr: int, word: int):
@@ -305,12 +476,14 @@ class ComefaArray:
                   block: Optional[int] = None):
         """values: uint bit matrix [len(rows), lanes(, blocks)]."""
         sel = slice(None) if block is None else block
+        mem = self.mem            # one lazy host sync for the whole batch
         for r, v in zip(rows, values):
-            self.mem[sel, r, :] = v
+            mem[sel, r, :] = v
 
     def get_lanes(self, rows: Sequence[int], block: Optional[int] = None):
         sel = slice(None) if block is None else block
-        return np.stack([self.mem[sel, r, :] for r in rows])
+        mem = self.mem
+        return np.stack([mem[sel, r, :] for r in rows])
 
     # -- execution ---------------------------------------------------------
     def run(self, program) -> int:
@@ -348,15 +521,10 @@ class ComefaArray:
     def _dispatch(self, mat: np.ndarray) -> int:
         if mat.shape[0] == 0:
             return 0
-        mem, carry, mask = _run(
-            jnp.asarray(self.mem), jnp.asarray(self.carry),
-            jnp.asarray(self.mask), jnp.asarray(mat), self.chain)
-        # np.array (not asarray): jax hands back read-only views of its
-        # device buffers, and callers interleave port writes / `layout`
-        # placements with runs (the LCU tile loop loads the next tile
-        # after the previous one computed)
-        self.mem = np.array(mem)
-        self.carry = np.array(carry)
-        self.mask = np.array(mask)
+        if self._dev is None:
+            self._dev = self.engine.to_device(self._mem, self._carry,
+                                              self._mask)
+            self.device_puts += 1
+        self._dev = self.engine.run(self._dev, device_mat(mat), self.chain)
         self.cycles += int(mat.shape[0])
         return int(mat.shape[0])

@@ -32,7 +32,6 @@ chained) block row.
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Sequence, Tuple
 
 import jax
@@ -44,36 +43,20 @@ from .block import (ComefaArray, encoded, read_port_word, write_port_word)
 from .isa import N_COLS, N_ROWS, ROW_ONES
 
 
-# One fused dispatch for the whole grid: `block._step` (and so
-# `block._run`) is rank-polymorphic over leading state axes, so the grid
-# runs the SAME jitted scan as a single array, just with stacked
-# ``[G, nb, R, C]`` state - every slot executes the shared program in
-# lockstep (the Sec. III-D FSM broadcast), the grid axis is one more
-# elementwise dimension to XLA (no vmap batching rules), and chain=True
-# shift seams stay inside each slot by construction.
+# One fused dispatch for the whole grid: every engine's step is
+# rank-polymorphic over leading state axes, so the grid runs the SAME
+# jitted scan as a single array, just with stacked ``[G, nb, R, C]``
+# state - every slot executes the shared program in lockstep (the
+# Sec. III-D FSM broadcast), the grid axis is one more elementwise
+# dimension to XLA (no vmap batching rules), and chain=True shift seams
+# stay inside each slot by construction.  Per-slot program dispatch
+# (`run_per_slot`) instead vmaps the grid axis - instruction fields
+# differ across slots, so it is no longer elementwise; the batched
+# gather/scatter rules make it slower than the fused shared path - the
+# price of per-slot digit streams, paid in simulator wall-clock while
+# the modelled hardware *saves* cycles (zero-skipping returns).
 _run_grid = block._run
-
-
-@functools.partial(jax.jit, static_argnames=("chain",))
-def _run_slotwise(mem, carry, mask, progs, chain: bool):
-    """Per-slot program dispatch: slot g scans its OWN ``progs[g]``.
-
-    Models one instruction FSM *per grid slice* instead of the shared
-    broadcast - the configuration `run_per_slot` exposes so
-    value-dependent (stream-specialized) programs can differ per slot.
-    The grid axis must be vmapped here (instruction fields differ across
-    slots, so it is no longer an elementwise dimension); the batched
-    gather/scatter rules make this dispatch slower than the fused shared
-    path - the price of per-slot digit streams, paid in simulator
-    wall-clock while the modelled hardware *saves* cycles (zero-skipping
-    returns).
-    """
-    def one(m, c, k, p):
-        (m, c, k), _ = jax.lax.scan(
-            functools.partial(block._step, chain), (m, c, k), p)
-        return m, c, k
-
-    return jax.vmap(one)(mem, carry, mask, progs)
+_run_slotwise = block._run_slotwise
 
 
 # per-slot program matrices are padded up to a multiple of this quantum so
@@ -132,11 +115,12 @@ class ComefaGrid:
     """
 
     def __init__(self, g: int, n_blocks: int = 1, chain: bool = False,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, engine=None):
         assert g >= 1
         self.g = g
         self.n_blocks = n_blocks
         self.chain = chain
+        self.engine = block.get_engine(engine)
         self.cycles = 0           # per-slot compute cycles (slots run in lockstep)
         self.io_words = 0         # port words moved across ALL slots
         self._shardings = (None if mesh is None
@@ -145,13 +129,60 @@ class ComefaGrid:
 
     # -- state ------------------------------------------------------------
     def reset(self) -> None:
-        self.mem = np.zeros((self.g, self.n_blocks, N_ROWS, N_COLS),
-                            dtype=np.uint8)
-        self.carry = np.zeros((self.g, self.n_blocks, N_COLS), dtype=np.uint8)
-        self.mask = np.zeros((self.g, self.n_blocks, N_COLS), dtype=np.uint8)
-        self.mem[:, :, ROW_ONES, :] = 1
+        mem = np.zeros((self.g, self.n_blocks, N_ROWS, N_COLS),
+                       dtype=np.uint8)
+        mem[:, :, ROW_ONES, :] = 1
+        self._mem = mem
+        self._carry = np.zeros((self.g, self.n_blocks, N_COLS),
+                               dtype=np.uint8)
+        self._mask = np.zeros((self.g, self.n_blocks, N_COLS),
+                              dtype=np.uint8)
+        self._dev = None          # engine-format device state, when ahead
         self.cycles = 0
         self.io_words = 0
+        self.host_syncs = 0       # device->host state materializations
+        self.device_puts = 0      # host->device state uploads
+
+    # same lazy host/device state contract as `ComefaArray`: device
+    # buffers chain between dispatches; any host access materializes
+    # writable numpy (dropping the device copy, since callers mutate the
+    # result in place via slot views / placements)
+    def _sync_host(self) -> None:
+        if self._dev is not None:
+            self._mem, self._carry, self._mask = self._active_engine(
+            ).to_host(self._dev)
+            self._dev = None
+            self.host_syncs += 1
+
+    @property
+    def mem(self) -> np.ndarray:
+        self._sync_host()
+        return self._mem
+
+    @mem.setter
+    def mem(self, value):
+        self._sync_host()         # keep carry/mask coherent before replacing
+        self._mem = np.asarray(value)
+
+    @property
+    def carry(self) -> np.ndarray:
+        self._sync_host()
+        return self._carry
+
+    @carry.setter
+    def carry(self, value):
+        self._sync_host()
+        self._carry = np.asarray(value)
+
+    @property
+    def mask(self) -> np.ndarray:
+        self._sync_host()
+        return self._mask
+
+    @mask.setter
+    def mask(self, value):
+        self._sync_host()
+        self._mask = np.asarray(value)
 
     def slot(self, g: int) -> _Slot:
         """Array-like view of slot g (usable with `layout` helpers)."""
@@ -177,7 +208,7 @@ class ComefaGrid:
         assert all(a.n_blocks == nb and a.chain == chain for a in arrays), \
             "grid slots must agree on n_blocks and chain"
         grid = cls(len(arrays), n_blocks=nb, chain=chain, mesh=mesh,
-                   rules=rules)
+                   rules=rules, engine=arrays[0].engine)
         for g, a in enumerate(arrays):
             grid.mem[g] = a.mem
             grid.carry[g] = a.carry
@@ -196,7 +227,8 @@ class ComefaGrid:
         """
         out = []
         for g in range(self.g):
-            a = ComefaArray(n_blocks=self.n_blocks, chain=self.chain)
+            a = ComefaArray(n_blocks=self.n_blocks, chain=self.chain,
+                            engine=self.engine)
             a.mem = self.mem[g].copy()
             a.carry = self.carry[g].copy()
             a.mask = self.mask[g].copy()
@@ -255,39 +287,59 @@ class ComefaGrid:
                          dtype=np.int32)   # zero fields == idle cycle
         for g, m in enumerate(mats):
             stack[g, :m.shape[0]] = m
-        self._store_state(*_run_slotwise(*self._device_args(stack),
-                                         self.chain))
+        engine = self._active_engine()
+        self._ensure_device(engine)
+        self._dev = engine.run_per_slot(self._dev,
+                                        self._device_prog(stack), self.chain)
         self.cycles += longest
         return counts
 
-    def _device_args(self, prog: np.ndarray) -> Tuple:
-        """State + program as device arrays (sharded when a mesh is set).
+    def _active_engine(self):
+        """The engine this dispatch actually uses.
+
+        A sharded grid swaps to the engine's `sharded_fallback` when it
+        declares one (a pallas_call does not partition across a mesh;
+        the packed-XLA scan shares its state layout, so the swap is free).
+        """
+        engine = self.engine
+        if self._shardings is not None:
+            engine = getattr(engine, "sharded_fallback", engine)
+        return engine
+
+    def _ensure_device(self, engine) -> None:
+        if self._dev is not None:
+            return
+        dev = engine.to_device(self._mem, self._carry, self._mask)
+        if self._shardings is not None:
+            # packed state keeps the grid axis leading and the same rank
+            # (row axis at -2, lanes packed in place), so the reference
+            # specs transfer unchanged
+            s_mem, s_latch, _ = self._shardings
+            dev = (jax.device_put(dev[0], s_mem),
+                   jax.device_put(dev[1], s_latch),
+                   jax.device_put(dev[2], s_latch))
+        self._dev = dev
+        self.device_puts += 1
+
+    def _device_prog(self, prog: np.ndarray):
+        """Program matrix as a device array (sharded when a mesh is set).
 
         The program sharding spec is fully-replicated (rank-agnostic), so
         the same marshalling serves the shared [T, F] matrix and the
-        per-slot [G, T, F] stack.
+        per-slot [G, T, F] stack; unsharded dispatches go through the
+        keyed device-mat cache (frozen encode-cache matrices skip the
+        upload entirely).
         """
-        args = (jnp.asarray(self.mem), jnp.asarray(self.carry),
-                jnp.asarray(self.mask), jnp.asarray(prog))
         if self._shardings is not None:
-            s_mem, s_latch, s_prog = self._shardings
-            args = (jax.device_put(args[0], s_mem),
-                    jax.device_put(args[1], s_latch),
-                    jax.device_put(args[2], s_latch),
-                    jax.device_put(args[3], s_prog))
-        return args
-
-    def _store_state(self, mem, carry, mask) -> None:
-        # np.array (not asarray): jax returns read-only device views, and
-        # callers interleave per-slot placements with runs (sweep loops)
-        self.mem = np.array(mem)
-        self.carry = np.array(carry)
-        self.mask = np.array(mask)
+            return jax.device_put(jnp.asarray(prog), self._shardings[2])
+        return block.device_mat(prog)
 
     def _dispatch(self, mat: np.ndarray) -> int:
         if mat.shape[0] == 0:
             return 0
-        self._store_state(*_run_grid(*self._device_args(mat), self.chain))
+        engine = self._active_engine()
+        self._ensure_device(engine)
+        self._dev = engine.run(self._dev, self._device_prog(mat), self.chain)
         self.cycles += int(mat.shape[0])
         return int(mat.shape[0])
 

@@ -1,3 +1,4 @@
 """Pallas TPU kernels: bit-plane/bit-serial compute (CoMeFa on the MXU/VPU),
-plus the simulator-backed validation kernels (`comefa_sim`)."""
-from . import comefa_sim, ops, ref
+the simulator-backed validation kernels (`comefa_sim`), and the bit-packed
+simulator step kernel itself (`comefa_step`)."""
+from . import comefa_sim, comefa_step, ops, ref

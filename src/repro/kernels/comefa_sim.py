@@ -6,7 +6,10 @@ MXU/VPU; this module runs the *same* workloads through the bit-level
 programs.  It is the validation backend that ties the kernel layer to the
 hardware model, and the showcase for the encode cache: shape-dependent
 programs (elementwise mul) are built and encoded once, then every batch
-reuses the cached engine matrix.
+reuses the cached engine matrix.  Every kernel takes ``engine=`` and
+threads it to the simulator (`core.comefa.block.get_engine`), so the
+bit-packed engines accelerate these workloads without touching call sites
+- ``REPRO_COMEFA_ENGINE=packed`` flips the whole module.
 
 Row budgets are bounded by one block's register file (`isa.USABLE_ROWS`:
 the 128 wordlines minus the reserved all-zeros/all-ones constant rows),
@@ -55,7 +58,8 @@ def _eltwise_mul_program(bits: int) -> Tuple[Program, tuple]:
 
 
 def comefa_eltwise_mul(a: np.ndarray, b: np.ndarray, *, bits: int,
-                       optimized: bool = True) -> np.ndarray:
+                       optimized: bool = True,
+                       engine=None) -> np.ndarray:
     """Unsigned elementwise multiply on the bit-level simulator.
 
     Tiles the flat inputs across blocks x 160 lanes, runs one cached
@@ -78,7 +82,7 @@ def comefa_eltwise_mul(a: np.ndarray, b: np.ndarray, *, bits: int,
     pad = n_blocks * lanes - n
     a2 = np.pad(a, (0, pad)).reshape(n_blocks, lanes)
     b2 = np.pad(b, (0, pad)).reshape(n_blocks, lanes)
-    arr = ComefaArray(n_blocks=n_blocks)
+    arr = ComefaArray(n_blocks=n_blocks, engine=engine)
     layout.place(arr, a2, rx.base, bits)
     layout.place(arr, b2, ry.base, bits)
     arr.run(prog)
@@ -89,7 +93,7 @@ def comefa_eltwise_mul(a: np.ndarray, b: np.ndarray, *, bits: int,
 def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                 x_bits: int, acc_bits: int = 32,
                 optimized: bool = True,
-                recode: str = "naive") -> np.ndarray:
+                recode: str = "naive", engine=None) -> np.ndarray:
     """y = w.T @ x with resident weights and a streamed vector (OOOR).
 
     w: [k, n] unsigned ints; x: [k] unsigned ints.  The k dimension is
@@ -112,7 +116,7 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                               reserve_neg=ir_mod.recode_is_signed(recode))
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
-    arr = ComefaArray(n_blocks=nb)
+    arr = ComefaArray(n_blocks=nb, engine=engine)
     for tile in plan.tiles():
         buf = plan.buffers[tile.buffer]
         for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
@@ -126,7 +130,8 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
 
 
 def comefa_gemm(a: np.ndarray, b: np.ndarray, *, bits: int,
-                n_blocks: int = 1, optimized: bool = True) -> np.ndarray:
+                n_blocks: int = 1, optimized: bool = True,
+                engine=None) -> np.ndarray:
     """C = a @ b on the bit-level simulator via the tiled LCU plan.
 
     a: [m, k], b: [k, n] unsigned ints below 2**bits.  `schedule.plan_gemm`
@@ -150,7 +155,7 @@ def comefa_gemm(a: np.ndarray, b: np.ndarray, *, bits: int,
     n = b.shape[1]
     plan = schedule.plan_gemm(m, k, n, bits, n_blocks=n_blocks)
     lane_plan = plan.lane_plan()
-    arr = ComefaArray(n_blocks=plan.n_blocks, chain=True)
+    arr = ComefaArray(n_blocks=plan.n_blocks, chain=True, engine=engine)
     out = np.empty(plan.n_outputs, dtype=np.int64)
     for tile in plan.tiles():
         buf = plan.buffers[tile.buffer]
@@ -171,7 +176,7 @@ def comefa_gemm(a: np.ndarray, b: np.ndarray, *, bits: int,
 
 
 def comefa_dot(a: np.ndarray, b: np.ndarray, *, bits: int,
-               optimized: bool = True) -> int:
+               optimized: bool = True, engine=None) -> int:
     """Full dot product <a, b> reduced to ONE scalar across all blocks.
 
     Where `comefa_gemv` stops at per-lane partial sums, this kernel
@@ -209,7 +214,7 @@ def comefa_dot(a: np.ndarray, b: np.ndarray, *, bits: int,
         bld.reduce_all(acc, 2 * bits, n_blocks=nb)
         _PROGRAMS[key] = (bld.build(optimize=optimized), (rx, ry, acc))
     prog, (rx, ry, acc) = _PROGRAMS[key]
-    arr = ComefaArray(n_blocks=nb, chain=True)
+    arr = ComefaArray(n_blocks=nb, chain=True, engine=engine)
     plan.place(arr, a, rx.base, bits)
     plan.place(arr, b, ry.base, bits)
     arr.run(prog)
@@ -218,7 +223,8 @@ def comefa_dot(a: np.ndarray, b: np.ndarray, *, bits: int,
 
 def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
                x_bits: int, acc_bits: Optional[int] = None,
-               optimized: bool = True, recode: str = "naive") -> np.ndarray:
+               optimized: bool = True, recode: str = "naive",
+               engine=None) -> np.ndarray:
     """y[t] = sum_j taps[j] * x[t-j]: resident taps, streamed samples.
 
     The paper's FIR benchmark (Sec. IV-C): taps live transposed one per
@@ -252,7 +258,7 @@ def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
     tap_rows = alloc.alloc(tap_bits, "taps")
     acc = alloc.alloc(acc_bits, "acc")
     neg = alloc.alloc(tap_bits, "neg") if signed else None
-    arr = ComefaArray(n_blocks=nb, chain=True)
+    arr = ComefaArray(n_blocks=nb, chain=True, engine=engine)
     plan.place(arr, taps, tap_rows.base, tap_bits)
 
     # per-phase programs are cached: repeated samples skip both
@@ -293,7 +299,7 @@ def comefa_fir(taps: np.ndarray, x: np.ndarray, *, tap_bits: int,
 
 def comefa_gemm_batched(a: np.ndarray, b: np.ndarray, *, bits: int,
                         n_blocks: int = 1, optimized: bool = True,
-                        mesh=None) -> np.ndarray:
+                        mesh=None, engine=None) -> np.ndarray:
     """C[g] = a[g] @ b[g] for G independent same-shape GEMMs on ONE grid.
 
     a: [G, m, k], b: [G, k, n] unsigned ints below 2**bits.  Every grid
@@ -312,7 +318,8 @@ def comefa_gemm_batched(a: np.ndarray, b: np.ndarray, *, bits: int,
     n = b.shape[2]
     plan = schedule.plan_gemm(m, k, n, bits, n_blocks=n_blocks)
     lane_plan = plan.lane_plan()
-    grid = ComefaGrid(G, n_blocks=plan.n_blocks, chain=True, mesh=mesh)
+    grid = ComefaGrid(G, n_blocks=plan.n_blocks, chain=True, mesh=mesh,
+                      engine=engine)
     out = np.empty((G, plan.n_outputs), dtype=np.int64)
     for tile in plan.tiles():
         buf = plan.buffers[tile.buffer]
@@ -397,7 +404,8 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                         x_bits: int, acc_bits: int = 32,
                         optimized: bool = True, mesh=None,
                         recode: Optional[str] = None,
-                        stats: Optional[Dict] = None) -> np.ndarray:
+                        stats: Optional[Dict] = None,
+                        engine=None) -> np.ndarray:
     """y[g] = w[g].T @ x[g] for G independent GEMVs on ONE grid dispatch.
 
     w: [G, k, n], x: [G, k] unsigned ints.  Two execution modes:
@@ -432,7 +440,8 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     if recode is not None:
         return _comefa_gemv_per_slot(w, x, w_bits=w_bits, x_bits=x_bits,
                                      acc_bits=acc_bits, optimized=optimized,
-                                     mesh=mesh, recode=recode, stats=stats)
+                                     mesh=mesh, recode=recode, stats=stats,
+                                     engine=engine)
     k_tile = gemv_batched_k_tile(w_bits, x_bits, acc_bits)
     if k_tile < 1:
         raise ValueError(
@@ -444,7 +453,7 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     x_rows = _gemv_batched_layout(plan)
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
-    grid = ComefaGrid(G, n_blocks=nb, mesh=mesh)
+    grid = ComefaGrid(G, n_blocks=nb, mesh=mesh, engine=engine)
     for tile in plan.tiles():
         buf = plan.buffers[tile.buffer]
         for g in range(G):
@@ -470,7 +479,8 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
 def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                           x_bits: int, acc_bits: int, optimized: bool,
                           mesh, recode: str,
-                          stats: Optional[Dict] = None) -> np.ndarray:
+                          stats: Optional[Dict] = None,
+                          engine=None) -> np.ndarray:
     """Per-slot-stream batched GEMV (`comefa_gemv_batched(recode=...)`).
 
     Same `schedule.plan_gemv` geometry as the single-instance kernel (no
@@ -483,7 +493,7 @@ def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                               reserve_neg=ir_mod.recode_is_signed(recode))
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
-    grid = ComefaGrid(G, n_blocks=nb, mesh=mesh)
+    grid = ComefaGrid(G, n_blocks=nb, mesh=mesh, engine=engine)
     for tile in plan.tiles():
         buf = plan.buffers[tile.buffer]
         for g in range(G):

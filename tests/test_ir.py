@@ -338,7 +338,9 @@ def test_program_is_list_like():
 
 def test_encode_cache_hits_on_structurally_equal_programs():
     block._ENCODE_CACHE.clear()
-    block.ENCODE_CACHE_STATS.update(hits=0, misses=0)
+    block._DEVICE_MAT_CACHE.clear()
+    block.ENCODE_CACHE_STATS.update(hits=0, misses=0,
+                                    device_hits=0, device_misses=0)
     arr = ComefaArray()
     n = 6
 
@@ -347,9 +349,14 @@ def test_encode_cache_hits_on_structurally_equal_programs():
                            list(range(2 * n, 3 * n + 1)))
 
     arr.run(fresh())
-    assert block.ENCODE_CACHE_STATS == {"hits": 0, "misses": 1}
+    assert block.ENCODE_CACHE_STATS == {"hits": 0, "misses": 1,
+                                        "device_hits": 0,
+                                        "device_misses": 1}
     arr.run(fresh())                    # rebuilt but structurally equal
     assert block.ENCODE_CACHE_STATS["hits"] == 1
+    # the frozen cached matrix also re-hits its device-side copy: the
+    # second dispatch uploads nothing
+    assert block.ENCODE_CACHE_STATS["device_hits"] == 1
     # an add has no fusible pairs, so its optimized form is structurally
     # identical and re-hits the same entry
     arr.run(fresh().optimize())
