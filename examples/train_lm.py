@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py \
 TPU slice to train the full config (add --mesh to shard).
 """
 import argparse
-import dataclasses
 
 from repro import configs
 from repro.data.pipeline import DataConfig, SyntheticLM

@@ -1,2 +1,4 @@
 """Fault-tolerant checkpointing."""
 from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,2 +1,4 @@
 """Faithful-reproduction track: CoMeFa simulator + analytical FPGA model."""
 from . import comefa, fpga_model
+
+__all__ = ["comefa", "fpga_model"]

@@ -55,9 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ir, isa
-from .isa import (COL_MUX, N_COLS, N_ROWS, ROW_ONES, ROW_ZEROS, WORD_BITS,
-                  Instr, encode_program)
+from . import ir, isa, verify
+from .isa import (COL_MUX, N_COLS, N_ROWS, ROW_ONES, WORD_BITS,
+                  encode_program)
 
 # field indices in the encoded program matrix
 _F = {name: i for i, name in enumerate(isa.ENGINE_FIELD_NAMES)}
@@ -335,6 +335,16 @@ def encoded(program) -> np.ndarray:
     `Instr` sequence (fingerprinted by the instruction tuple), or an
     already-encoded int32 matrix (returned as-is; a legacy
     ``[T, N_FIELDS]`` matrix is widened with dst2/pred2 columns).
+
+    This is the single encode funnel for every execution path
+    (`ComefaArray.run`/`run_programs`, the `ComefaGrid` dispatches), so
+    it is also where the ``REPRO_COMEFA_VERIFY`` pre-encode hook lives:
+    with the env flag set, every `ir.Program` headed for an engine is
+    statically verified (dual-port races, reserved-row writes - see
+    `verify.maybe_verify`) and a hazard raises `VerificationError`
+    before any instruction executes.  Raw instruction lists and
+    pre-encoded matrices bypass the hook by design: they sit below the
+    IR contract the verifier checks.
     """
     if isinstance(program, np.ndarray):
         if program.shape[0] and program.shape[1] == isa.N_FIELDS:
@@ -343,6 +353,7 @@ def encoded(program) -> np.ndarray:
             return np.zeros((0, isa.N_ENGINE_FIELDS), np.int32)
         return program
     if isinstance(program, ir.Program):
+        verify.maybe_verify(program)
         return _encode_cached(program.key, program.encode)
     instrs = tuple(program)
     return _encode_cached(instrs, lambda: encode_program(instrs))
@@ -511,6 +522,8 @@ class ComefaArray:
         when the programs deliberately thread latch state (then the batch
         is cycle-for-cycle identical to sequential `run()` calls).
         """
+        programs = list(programs)
+        verify.maybe_verify_batch(programs, reset_latches)
         mats = [encoded(p) for p in programs]
         if not mats:
             return []

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import block, isa
+from . import block, isa, verify
 from .block import (ComefaArray, encoded, read_port_word, write_port_word)
 from .isa import N_COLS, N_ROWS, ROW_ONES
 
@@ -251,6 +251,8 @@ class ComefaGrid:
         (charged to the following program), so no program's carry/mask
         latches leak into the next.  Returns per-program cycle counts.
         """
+        programs = list(programs)
+        verify.maybe_verify_batch(programs, reset_latches)
         mats = [encoded(p) for p in programs]
         if not mats:
             return []

@@ -44,6 +44,9 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import isa
+from .diagnostics import (CONCAT_INPUT, PASS_STRUCTURE, STREAM_DIGITS,
+                          STREAM_MISSING, STREAM_RANGE, STREAM_RECODE,
+                          SYMBOLIC_SLOT, VerificationError, raise_diag)
 from .isa import (Instr, N_ROWS, PRED_ALWAYS, PRED_CARRY, PRED_MASK,
                   PRED_NOT_CARRY, RESERVED_ROWS, ROW_ONES, ROW_ZEROS,
                   TT_ONE, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY, W2_ZERO)
@@ -386,8 +389,9 @@ def recode_digits(x: int, n_bits: int, recode: str = "naive") -> List[int]:
     """Digit stream for x under a recoding mode (or a callable recoder)."""
     fn = RECODERS.get(recode, recode)
     if not callable(fn):
-        raise ValueError(f"unknown recode mode {recode!r} "
-                         f"(have {sorted(RECODERS)})")
+        raise_diag(STREAM_RECODE,
+                   f"unknown recode mode {recode!r} "
+                   f"(have {sorted(RECODERS)})")
     digits = fn(x, n_bits)
     assert sum(d << i for i, d in enumerate(digits)) == x
     return digits
@@ -486,11 +490,15 @@ class Program:
 
     def _concrete(self, what: str) -> None:
         if self.is_symbolic:
-            raise ValueError(
+            sym_idx = next(i for i, s in enumerate(self._slots)
+                           if isinstance(s, StreamSlot))
+            raise_diag(
+                SYMBOLIC_SLOT,
                 f"cannot {what} a symbolic program ({self.name!r} still "
                 f"references streamed operands "
                 f"{[s.name for s in self.streams()]}); run "
-                f"ir.specialize_streams(program, values) first")
+                f"ir.specialize_streams(program, values) first",
+                program=self.name, slot=sym_idx)
 
     @property
     def cycles(self) -> int:
@@ -556,11 +564,19 @@ class Program:
 
     # -- optimisation ------------------------------------------------------
     def optimize(self, passes: Optional[Sequence] = None,
-                 live_out: Optional[Iterable[int]] = None) -> "Program":
+                 live_out: Optional[Iterable[int]] = None,
+                 verify: bool = False) -> "Program":
         """Run the pass pipeline; returns a new, semantically equal Program.
 
         Default pipeline: constant-row folding -> dead-write elimination
         (needs a live-out annotation to do anything) -> dual-port co-issue.
+
+        With ``verify=True`` every pass is translation-validated: the
+        reference interpreter in `verify.py` runs the slots before and
+        after the rewrite from seeded random machine states and a
+        `VerificationError` (with `pass-footprint` / `pass-value` /
+        `pass-latch` diagnostics) refuses the miscompile if the written
+        footprint grew or any live-out row or final latch diverged.
         """
         self._concrete("optimize")
         lo = frozenset(live_out) if live_out is not None else self.live_out
@@ -571,16 +587,27 @@ class Program:
             # passes cannot be honoured on fused slots - fail loudly rather
             # than silently skipping them.
             if passes is not None:
-                raise ValueError(
+                raise_diag(
+                    PASS_STRUCTURE,
                     "cannot run explicit passes on an already-fused "
-                    "program; optimize before co-issue scheduling")
+                    "program; optimize before co-issue scheduling",
+                    program=self.name)
             return Program.from_slots(list(self._slots), name=self.name,
                                       live_out=lo)
         if passes is None:
             passes = DEFAULT_PASSES
         slots: List[Slot] = [tuple(s) for s in self._slots]
         for p in passes:
-            slots = p(slots, live_out=lo)
+            new_slots = p(slots, live_out=lo)
+            if verify:
+                from . import verify as _verify  # deferred: verify imports ir
+                diags = _verify.validate_pass(
+                    slots, new_slots, live_out=lo, name=self.name,
+                    pass_name=getattr(p, "__name__", repr(p)))
+                errors = [d for d in diags if d.is_error]
+                if errors:
+                    raise VerificationError(errors)
+            slots = new_slots
         return Program.from_slots(slots, name=self.name + "+opt",
                                   live_out=lo)
 
@@ -603,6 +630,16 @@ def concat_programs(programs: Sequence, name: str = "batch",
     live = set()
     annotated = True
     for idx, p in enumerate(programs):
+        if not isinstance(p, Program):
+            items = list(p)
+            bad = next((x for x in items if not isinstance(x, Instr)), None)
+            if bad is not None:
+                raise_diag(
+                    CONCAT_INPUT,
+                    f"constituent {idx} is not an IR program: contains "
+                    f"{type(bad).__name__} (expected isa.Instr elements "
+                    f"or an ir.Program)", program=name, slot=idx)
+            p = items
         if reset_latches and idx:
             out.append(isa.latch_clear())
         out.extend(p)
@@ -622,7 +659,8 @@ def concat_programs(programs: Sequence, name: str = "batch",
 # ---------------------------------------------------------------------------
 
 def _expand_stream_mac(slot: StreamMac, value: int, recode: str,
-                       out: List[Slot]) -> None:
+                       out: List[Slot], program_name: Optional[str] = None,
+                       slot_index: Optional[int] = None) -> None:
     """Concrete instruction slots for one digit-serial MAC.
 
     Expansion contract (pinned bit-exact against the legacy eager
@@ -643,11 +681,13 @@ def _expand_stream_mac(slot: StreamMac, value: int, recode: str,
     digits = recode_digits(value, slot.stream.n_bits, recode)
     if any(d < 0 for d in digits):
         if slot.stream.digit_set != "signed" or slot.neg is None:
-            raise ValueError(
+            raise_diag(
+                STREAM_DIGITS,
                 f"recode={recode!r} produced negative digits but stream "
                 f"{slot.stream.name!r} has digit_set="
                 f"{slot.stream.digit_set!r} / no neg scratch rows; "
-                f"emit the StreamMac with neg rows or use recode='naive'")
+                f"emit the StreamMac with neg rows or use recode='naive'",
+                program=program_name, slot=slot_index)
         neg = list(slot.neg)[:nw]
         out.extend(pgen.logic2(w, w, neg, isa.TT_NOT_A)._slots)
     if recode == "naive":
@@ -698,19 +738,23 @@ def specialize_streams(program: "Program", values: Sequence[int],
         program = Program(program)
     streams = program.streams()
     if streams and streams[-1].index >= len(values):
-        raise ValueError(
+        raise_diag(
+            STREAM_MISSING,
             f"program references stream index {streams[-1].index} but "
-            f"only {len(values)} values were supplied")
+            f"only {len(values)} values were supplied",
+            program=program.name)
     for s in streams:
         v = int(values[s.index])
         if not 0 <= v < (1 << s.n_bits):
-            raise ValueError(f"value {v} out of range for {s.n_bits}-bit "
-                             f"stream {s.name!r}")
+            raise_diag(STREAM_RANGE,
+                       f"value {v} out of range for {s.n_bits}-bit "
+                       f"stream {s.name!r}", program=program.name)
     out: List[Slot] = []
-    for slot in program._slots:
+    for slot_index, slot in enumerate(program._slots):
         if isinstance(slot, StreamMac):
             _expand_stream_mac(slot, int(values[slot.stream.index]),
-                               recode, out)
+                               recode, out, program_name=program.name,
+                               slot_index=slot_index)
         elif isinstance(slot, StreamExt):
             bit = (int(values[slot.stream.index]) >> slot.bit) & 1
             out.append((dataclasses.replace(slot.instr, ext_bit=bit),))
@@ -896,6 +940,23 @@ def _can_fuse(first: Instr, second: Instr) -> bool:
     return False
 
 
+def _port_write_race(c: Instr, w: Instr) -> bool:
+    """Would fusing compute `c` with W2 rider `w` race on a row?
+
+    The simulator retires W1 before W2, so a same-row fusion is
+    *simulator*-deterministic - but on a true-dual-port BRAM two ports
+    writing one address in one cycle is undefined unless the write
+    enables cannot both assert.  The only lane-disjoint predicate pair
+    the ISA can express is {PRED_CARRY, PRED_NOT_CARRY} (the select /
+    restoring-division pattern); any other same-row combination can
+    double-drive a cell and is rejected by the scheduler and flagged
+    `port-race` by the verifier.
+    """
+    if not c.wp1_en or c.dst_row != w.dst_row:
+        return False
+    return {c.pred_sel, w.pred_sel} != {PRED_CARRY, PRED_NOT_CARRY}
+
+
 # lookahead bound for the co-issue list scheduler: far enough to clear a
 # typical add/ripple sequence, small enough to keep the pass linear-ish
 COISSUE_WINDOW = 16
@@ -982,8 +1043,9 @@ def coissue_dual_port(slots: List[Slot], live_out=None,
                     j += 1
                     continue
                 w = riders[j]
-                if w is not None and _hoistable(w, rows_read, rows_written,
-                                                carry_dirty, mask_dirty):
+                if (w is not None and not _port_write_race(x, w)
+                        and _hoistable(w, rows_read, rows_written,
+                                       carry_dirty, mask_dirty)):
                     out.append((x, w))
                     consumed[j] = True
                     fused = True
@@ -1017,8 +1079,13 @@ DEFAULT_PASSES = (fold_constant_rows, eliminate_dead_writes,
                   coissue_dual_port)
 
 
-def optimize(program, live_out=None) -> Program:
-    """Convenience: lift a raw instruction list to IR and optimise it."""
+def optimize(program, live_out=None, verify: bool = False) -> Program:
+    """Convenience: lift a raw instruction list to IR and optimise it.
+
+    ``verify=True`` translation-validates every pass (see
+    `Program.optimize`) and refuses a miscompile with a structured
+    `VerificationError`.
+    """
     if not isinstance(program, Program):
         program = Program(program)
-    return program.optimize(live_out=live_out)
+    return program.optimize(live_out=live_out, verify=verify)

@@ -15,7 +15,7 @@ import dataclasses
 
 import numpy as np
 
-from .isa import COL_MUX, N_COLS, N_ROWS, WORD_BITS
+from .isa import COL_MUX, N_COLS, WORD_BITS
 
 
 def to_bits(values: np.ndarray, n_bits: int) -> np.ndarray:

@@ -21,9 +21,9 @@ from . import ir
 from .ir import (Operand, Program, RowAllocator, StreamExt, StreamMac,
                  StreamedOperand, specialize_streams)
 from .isa import (Instr, N_COLS, PRED_ALWAYS, PRED_CARRY, PRED_MASK,
-                  PRED_NOT_CARRY, ROW_ONES, TT_AND, TT_COPY_A, TT_COPY_B,
-                  TT_NOT_A, TT_ONE, TT_OR, TT_XNOR, TT_XOR, TT_ZERO,
-                  W1_RIGHT, W1_S, W2_CARRY, W2_LEFT, ceil_log2, latch_clear)
+                  PRED_NOT_CARRY, ROW_ONES, TT_AND, TT_COPY_A, TT_NOT_A,
+                  TT_OR, TT_XOR, TT_ZERO, W1_RIGHT, W1_S, W2_CARRY,
+                  W2_LEFT, ceil_log2, latch_clear)
 
 Rows = Sequence[int]
 

@@ -145,6 +145,17 @@ class Schedule:
             return 0
         return max(sum(t) for t in self.tile_costs)
 
+    def verify(self) -> list:
+        """Re-check this timeline against the pipeline invariants.
+
+        Delegates to `verify.verify_schedule`: per-tile phase ordering,
+        one-tile-at-a-time engine serialization, and the ``n_buffers``
+        double-buffer reuse lag.  Returns the `Diagnostic` list (empty
+        when the schedule is legal).
+        """
+        from . import verify as _verify   # deferred: verify imports ir
+        return _verify.verify_schedule(self)
+
     def __repr__(self):
         return (f"Schedule({self.name!r}: {self.n_tiles} tiles, "
                 f"{self.total_cycles} cycles pipelined / "
@@ -305,6 +316,12 @@ class GemmPlan:
         costs = [(self.load_cycles, c, self.unload_cycles(t))
                  for t in self.tiles()]
         return Schedule(costs, name=f"gemm{self.m}x{self.k}x{self.n}")
+
+    def verify(self) -> list:
+        """Row-region legality diagnostics (`verify.verify_plan`)."""
+        from . import verify as _verify   # deferred: verify imports ir
+        return _verify.verify_plan(
+            self, name=f"gemm{self.m}x{self.k}x{self.n}")
 
 
 def plan_gemm(m: int, k: int, n: int, bits: int,
@@ -475,6 +492,11 @@ class GemvPlan:
             costs.append((self.load_cycles(t), prog.cycles,
                           self.unload_cycles(t)))
         return Schedule(costs, name=f"gemv_k{self.k}")
+
+    def verify(self) -> list:
+        """Row-region legality diagnostics (`verify.verify_plan`)."""
+        from . import verify as _verify   # deferred: verify imports ir
+        return _verify.verify_plan(self, name=f"gemv_k{self.k}")
 
 
 def gemv_k_tile(w_bits: int, acc_bits: int,

@@ -17,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from . import resources as R
 
 # energy constants (22nm-scaled, per activity-weighted toggle)
 # wire: ~0.16 fJ/mm/bit (Keckler et al. scaled to 22nm via Stillmaker-Baas),

@@ -20,12 +20,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional
+from typing import Dict
 
 from ..comefa import timing
 from . import resources as R
-from .throughput import comefa_mac_throughput, dsp_mac_throughput, \
-    lb_mac_throughput
+from .throughput import dsp_mac_throughput, lb_mac_throughput
 
 # ---------------------------------------------------------------------------
 # published results (Fig 9; 1.0 = no speedup) - the validation targets

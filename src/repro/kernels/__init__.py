@@ -2,3 +2,5 @@
 the simulator-backed validation kernels (`comefa_sim`), and the bit-packed
 simulator step kernel itself (`comefa_step`)."""
 from . import comefa_sim, comefa_step, ops, ref
+
+__all__ = ["comefa_sim", "comefa_step", "ops", "ref"]

@@ -29,7 +29,7 @@ import numpy as np
 from ..core.comefa import (ComefaArray, ComefaGrid, N_COLS, layout, program,
                            schedule)
 from ..core.comefa import ir as ir_mod
-from ..core.comefa.ir import Operand, Program, RowAllocator
+from ..core.comefa.ir import Program, RowAllocator
 from ..core.comefa.isa import (Instr, N_ROWS, PRED_MASK, RESERVED_ROWS,
                                TT_COPY_A, USABLE_ROWS, ceil_log2)
 

@@ -7,7 +7,6 @@ used by `quant.layers.QuantizedLinear`.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

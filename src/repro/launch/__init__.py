@@ -1,3 +1,5 @@
 """Launchers: mesh builders, dry-run, roofline, train/serve CLIs.
 (dryrun/roofline set XLA device-count flags at import - import lazily.)"""
 from . import mesh
+
+__all__ = ["mesh"]

@@ -16,7 +16,6 @@ collective bytes into results/dryrun/<cell>.json - the roofline source.
 """
 
 import argparse
-import dataclasses
 import functools
 import json
 import re
@@ -25,9 +24,7 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
-from .. import configs
 from ..models import lm
 from ..models.common import Config
 from ..parallel import sharding as shd

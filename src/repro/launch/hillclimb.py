@@ -17,7 +17,6 @@ import argparse
 import copy
 import json
 import os
-import sys
 from typing import Any, Dict, List, Optional
 
 from . import dryrun as dr

@@ -14,7 +14,6 @@ import json
 import os
 from typing import Dict, Optional
 
-import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "results")

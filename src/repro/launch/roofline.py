@@ -33,7 +33,6 @@ import sys
 import time
 from typing import Any, Dict, Optional
 
-import jax
 
 from .. import configs
 from ..models.common import Config

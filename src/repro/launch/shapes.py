@@ -16,7 +16,7 @@ are decoder-bearing, so only the long_500k rule filters cells.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

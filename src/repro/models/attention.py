@@ -2,7 +2,7 @@
 and single-token decode against a (sequence-shardable) KV cache."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

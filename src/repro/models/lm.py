@@ -12,7 +12,7 @@ state for mlstm/slstm/rglru) through the same group structure.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -276,9 +276,9 @@ def stack_state_init(cfg: Config, batch: int, max_len: int,
     pattern = pattern or cfg.pattern
     n = n_layers or cfg.n_layers
     n_groups, n_rem = divmod(n, len(pattern))
-    gstate = lambda: {f"l{i}": layer_state_init(cfg, batch, max_len,
-                                                pattern[i])
-                      for i in range(len(pattern))}
+    def gstate():
+        return {f"l{i}": layer_state_init(cfg, batch, max_len, pattern[i])
+                for i in range(len(pattern))}
     out: Params = {}
     if cfg.scan_layers and n_groups > 0:
         one = gstate()

@@ -17,7 +17,7 @@ parallelized with an associative scan over the sequence.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

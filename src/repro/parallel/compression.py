@@ -14,7 +14,6 @@ the chip.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

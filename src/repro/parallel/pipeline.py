@@ -12,8 +12,7 @@ needs the stage axis, and proves our stack composes with it.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,2 +1,4 @@
 """Precision-agnostic quantization: bit-plane packing + quantized layers."""
 from . import bitplane
+
+__all__ = ["bitplane"]

@@ -1,2 +1,4 @@
 """Serving: prefill/decode engine with sharded KV caches."""
 from . import engine
+
+__all__ = ["engine"]

@@ -12,14 +12,12 @@ bytes are the roofline term this feature attacks.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..models import attention as attn
 from ..models import lm
 from ..models.common import Config
 from ..parallel import sharding as shd

@@ -26,7 +26,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 
 from ..checkpoint.manager import CheckpointManager
-from ..data.pipeline import DataConfig, SyntheticLM
+from ..data.pipeline import SyntheticLM
 from ..models.common import Config
 from . import step as step_mod
 

@@ -9,8 +9,7 @@ state.  m stays bf16 (sign matters, magnitudes are tame).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

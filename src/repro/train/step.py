@@ -81,10 +81,11 @@ def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array],
 
         def accum(carry, mb):
             g_acc, l_acc = carry
-            (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+            (lv, _), g = jax.value_and_grad(loss_of, has_aux=True)(params,
+                                                                   mb)
             g_acc = jax.tree.map(
                 lambda a, b: a + (b / nmb).astype(adt), g_acc, g)
-            return (g_acc, l_acc + l / nmb), None
+            return (g_acc, l_acc + lv / nmb), None
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
         if tcfg.unroll_accum:

@@ -1,6 +1,5 @@
 """Pallas kernel tests: allclose vs pure-jnp oracles across shape/dtype
 sweeps + hypothesis property tests (interpret mode on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

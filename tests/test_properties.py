@@ -1,6 +1,5 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
-import pytest
 
 try:
     from hypothesis import example, given, settings, strategies as st
@@ -10,7 +9,6 @@ except ImportError:
     # instead of perpetually skipping (see tests/_minihyp.py)
     from _minihyp import example, given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.comefa import ComefaArray, N_COLS, isa, layout, program, \
@@ -153,7 +151,8 @@ def test_bitplane_matmul_linearity(seed):
     packed, scale = bp.quantize_pack(w, 4, axis=0)
     x1 = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
     x2 = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
-    f = lambda x: ops.bitplane_matmul(x, packed, scale, bits=4)
+    def f(x):
+        return ops.bitplane_matmul(x, packed, scale, bits=4)
     lhs = f(2.0 * x1 + x2)
     rhs = 2.0 * f(x1) + f(x2)
     np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),

@@ -19,9 +19,9 @@ except ImportError:
     # fall back to the deterministic seeded sampler (tests/_minihyp.py)
     from _minihyp import example, given, settings, strategies as st
 
-from repro.core.comefa import (ComefaArray, ComefaGrid, N_COLS, ir, layout,
-                               program, schedule, timing)
-from repro.core.comefa.ir import (Program, RowAllocator, StreamMac,
+from repro.core.comefa import (ComefaArray, ComefaGrid, N_COLS, ir,
+                               layout, program, timing)
+from repro.core.comefa.ir import (Program, RowAllocator,
                                   StreamedOperand, specialize_streams)
 from repro.core.comefa.isa import TT_NOT_A, TT_XOR
 

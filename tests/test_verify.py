@@ -1,0 +1,482 @@
+"""Static-verifier tests: the shipped-program clean sweep, seeded
+hazard-injection properties (every hazard class must be detected with
+its stable diagnostic code), translation validation of the optimizer
+passes (including intentionally broken passes), structured diagnostics
+at the legacy raise sites, and the ``REPRO_COMEFA_VERIFY`` pre-encode
+hook."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # no hypothesis in this environment (the container image has no pip):
+    # fall back to the deterministic seeded sampler (tests/_minihyp.py)
+    from _minihyp import given, settings, strategies as st
+
+from repro.core.comefa import (ComefaArray, ir, isa, program as pgen,
+                               schedule, verify)
+from repro.core.comefa.diagnostics import (
+    BUFFER_LAG, CONCAT_INPUT, PASS_FOOTPRINT, PASS_LATCH, PASS_VALUE,
+    PORT_RACE, REGION_OVERLAP, REGION_RESERVED, RESERVED_WRITE, SEAM_SHIFT,
+    STALE_LATCH, STREAM_DIGITS, STREAM_MISSING, STREAM_RANGE, STREAM_RECODE,
+    SYMBOLIC_SLOT, WARNING, Diagnostic, VerificationError)
+from repro.core.comefa.isa import (N_COLS, N_ROWS, PRED_CARRY,
+                                   PRED_NOT_CARRY, ROW_ONES, ROW_ZEROS)
+
+
+def codes(diags):
+    return {d.code for d in diags}
+
+
+def error_codes(diags):
+    return {d.code for d in diags if d.is_error}
+
+
+# ---------------------------------------------------------------------------
+# clean sweep: every shipped generator / planner program verifies clean
+# ---------------------------------------------------------------------------
+
+def test_shipped_generator_programs_verify_clean():
+    assert verify._sweep_generators() == []
+
+
+def test_shipped_planner_programs_verify_clean():
+    assert verify._sweep_plans() == []
+
+
+def test_selftests_catch_every_injected_hazard():
+    results = verify._selftests(seed=3)
+    missed = [(label, detail) for label, caught, detail in results
+              if not caught]
+    assert not missed
+    assert len(results) >= 9          # one per hazard/miscompile class
+
+
+def test_cli_all_exits_zero(capsys):
+    assert verify.main(["--all"]) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# hazard injection: dual-port write race
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(row=st.integers(0, 125),
+       pred_c=st.integers(0, 3), pred_w=st.integers(0, 3))
+def test_injected_port_race_detected(row, pred_c, pred_w):
+    host = isa.Instr(src1_row=1, src2_row=2, dst_row=row,
+                     truth_table=isa.TT_XOR, wp1_en=1, c_rst=1,
+                     pred_sel=pred_c)
+    rider = isa.Instr(dst_row=row, wp2_en=1, w2_sel=isa.W2_ZERO,
+                      pred_sel=pred_w)
+    prog = ir.Program.from_slots([(host, rider)], name="mut")
+    diags = verify.verify_program(prog)
+    disjoint = {pred_c, pred_w} == {PRED_CARRY, PRED_NOT_CARRY}
+    if disjoint:
+        # the one lane-disjoint predicate pair the ISA can express: the
+        # write enables cannot both assert, so no race (div relies on it)
+        assert PORT_RACE not in error_codes(diags)
+    else:
+        hit = [d for d in diags if d.code == PORT_RACE]
+        assert hit and row in hit[0].rows and hit[0].slot == 0
+
+
+def test_port_race_different_rows_is_clean():
+    host = isa.Instr(src1_row=1, src2_row=2, dst_row=5,
+                     truth_table=isa.TT_XOR, wp1_en=1, c_rst=1)
+    rider = isa.Instr(dst_row=6, wp2_en=1, w2_sel=isa.W2_ZERO)
+    prog = ir.Program.from_slots([(host, rider)], name="ok")
+    assert PORT_RACE not in codes(verify.verify_program(prog))
+
+
+def test_single_instr_driving_both_ports_is_a_race():
+    i = isa.Instr(src1_row=1, src2_row=2, dst_row=7, truth_table=isa.TT_AND,
+                  wp1_en=1, wp2_en=1, w2_sel=isa.W2_ZERO, c_rst=1)
+    diags = verify.verify_program([i])
+    assert PORT_RACE in error_codes(diags)
+
+
+def test_coissue_scheduler_refuses_racy_hoist():
+    """The tightened co-issue pass must not fuse same-row W1+W2 writes
+    with overlapping predicates (simulator-deterministic, but undefined
+    on real dual-port BRAM)."""
+    compute = isa.Instr(src1_row=1, src2_row=2, dst_row=9,
+                        truth_table=isa.TT_XOR, wp1_en=1, c_rst=1)
+    rider = isa.Instr(dst_row=9, wp2_en=1, w2_sel=isa.W2_ZERO)
+    out = ir.coissue_dual_port([(compute,), (rider,)])
+    assert all(len(s) == 1 for s in out)    # no fusion happened
+    opt = ir.Program([compute, rider]).optimize()
+    assert not [d for d in verify.verify_program(opt) if d.is_error]
+
+
+# ---------------------------------------------------------------------------
+# hazard injection: reserved-row writes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(reserved=st.sampled_from([ROW_ZEROS, ROW_ONES]),
+       pos=st.integers(0, 3))
+def test_injected_reserved_write_detected(reserved, pos):
+    clean = pgen.add([2, 3], [4, 5], [6, 7, 8])
+    hot = pgen.copy_rows([9], [reserved])
+    slots = list(clean.slots)
+    cut = min(pos, len(slots))
+    mutated = ir.Program.from_slots(
+        slots[:cut] + list(hot.slots) + slots[cut:], name="mut")
+    hit = [d for d in verify.verify_program(mutated)
+           if d.code == RESERVED_WRITE]
+    assert hit and reserved in hit[0].rows and hit[0].slot == cut
+
+
+def test_clean_program_has_no_reserved_write():
+    assert RESERVED_WRITE not in codes(
+        verify.verify_program(pgen.add([2, 3], [4, 5], [6, 7, 8])))
+
+
+# ---------------------------------------------------------------------------
+# hazard injection: stale latch reads
+# ---------------------------------------------------------------------------
+
+def test_stale_carry_read_detected_when_latches_unknown():
+    diags = verify.verify_program(pgen.store_carry(5), clear_latches=False)
+    hit = [d for d in diags if d.code == STALE_LATCH]
+    assert hit and hit[0].is_error
+
+
+def test_no_stale_latch_after_known_clear():
+    assert STALE_LATCH not in codes(
+        verify.verify_program(pgen.store_carry(5), clear_latches=True))
+
+
+def test_batch_boundary_stale_latch_is_warning():
+    """reset_latches=False latch threading is documented/deliberate: the
+    cross-program read is reported, but at warning severity."""
+    progs = [pgen.add([2, 3], [4, 5], [6, 7, 8]),
+             pgen.copy_rows([2, 3], [10, 11], pred_sel=PRED_CARRY)]
+    diags = verify.verify_batch(progs, reset_latches=False)
+    hit = [d for d in diags if d.code == STALE_LATCH]
+    assert hit and all(d.severity == WARNING for d in hit)
+    # with boundary latch clears the same batch is silent
+    assert STALE_LATCH not in codes(
+        verify.verify_batch(progs, reset_latches=True))
+
+
+@settings(max_examples=20, deadline=None)
+@given(dst=st.integers(10, 60))
+def test_injected_stale_latch_prefix_detected(dst):
+    """A latch-consuming program fragment hoisted in front of the write
+    that was supposed to precede it."""
+    prog = pgen.store_carry(dst) + pgen.add([2, 3], [4, 5], [6, 7, 8])
+    diags = verify.verify_program(prog, clear_latches=False)
+    assert STALE_LATCH in codes(diags)
+    hit = [d for d in diags if d.code == STALE_LATCH]
+    assert hit[0].slot == 0
+
+
+# ---------------------------------------------------------------------------
+# hazard injection: plan region overlap / reserved regions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.sampled_from([6, 9, 12]), n=st.sampled_from([4, 8]),
+       buf=st.integers(0, 1))
+def test_injected_region_overlap_detected(k, n, buf):
+    plan = schedule.plan_gemv(k=k, n=n, w_bits=4, x_bits=4, acc_bits=10,
+                              k_tile=3)
+    assert verify.verify_plan(plan) == []       # allocator output is clean
+    bad_acc = ir.Operand(plan.buffers[buf].rows[:len(plan.acc)], "acc")
+    broken = dataclasses.replace(plan, acc=bad_acc)
+    hit = [d for d in verify.verify_plan(broken)
+           if d.code == REGION_OVERLAP]
+    assert hit and hit[0].rows
+
+
+def test_region_reserved_rows_detected():
+    plan = schedule.plan_gemv(k=6, n=4, w_bits=4, x_bits=4, acc_bits=10,
+                              k_tile=3)
+    bad = dataclasses.replace(
+        plan, acc=ir.Operand(tuple(plan.acc[:-1]) + (ROW_ONES,), "acc"))
+    hit = [d for d in verify.verify_plan(bad) if d.code == REGION_RESERVED]
+    assert hit and ROW_ONES in hit[0].rows
+
+
+def test_plan_verify_delegates():
+    gemm = schedule.plan_gemm(2, 4, 2, 4)
+    assert gemm.verify() == []
+    gemv = schedule.plan_gemv(k=6, n=4, w_bits=4, x_bits=4, acc_bits=10,
+                              k_tile=3)
+    assert gemv.verify() == []
+    assert gemm.schedule().verify() == []
+
+
+def test_broken_schedule_lag_detected():
+    class BrokenSchedule(schedule.Schedule):
+        def timeline(self):
+            spans = super().timeline()
+            out = []
+            for s in spans:
+                if s.tile == self.n_buffers and s.kind == "load":
+                    s = dataclasses.replace(s, start=0, end=s.end - s.start)
+                out.append(s)
+            return out
+
+    sched = BrokenSchedule([(4, 9, 3)] * 4, name="mut-lag")
+    assert BUFFER_LAG in codes(sched.verify())
+
+
+# ---------------------------------------------------------------------------
+# seam shifts and symbolic slots
+# ---------------------------------------------------------------------------
+
+def test_seam_shift_flagged_only_when_unchained_multiblock():
+    prog = pgen.shift_lanes([2, 3], [4, 5])
+    flagged = verify.verify_program(prog, n_blocks=2, chain=False)
+    hit = [d for d in flagged if d.code == SEAM_SHIFT]
+    assert hit and all(d.severity == WARNING for d in hit)
+    assert SEAM_SHIFT not in codes(
+        verify.verify_program(prog, n_blocks=2, chain=True))
+    assert SEAM_SHIFT not in codes(
+        verify.verify_program(prog, n_blocks=1, chain=False))
+
+
+def test_symbolic_slot_reported_and_blocks_encode():
+    sym = pgen.fir_stream([2, 3], [10, 11, 12, 13], n_samples=1, x_bits=2)
+    diags = verify.verify_program(sym)
+    hit = [d for d in diags if d.code == SYMBOLIC_SLOT]
+    assert hit and hit[0].slot is not None
+    with pytest.raises(VerificationError, match="symbolic") as exc:
+        sym.encode()
+    assert SYMBOLIC_SLOT in exc.value.codes
+    assert exc.value.diagnostics[0].program == sym.name
+
+
+# ---------------------------------------------------------------------------
+# translation validation: the real passes validate, broken passes do not
+# ---------------------------------------------------------------------------
+
+def test_default_pipeline_validates_on_shipped_programs():
+    for prog, live in ((pgen.mul([2, 3], [4, 5], [6, 7, 8, 9]),
+                        {6, 7, 8, 9}),
+                       (pgen.add([2, 3], [4, 5], [10, 11, 12]),
+                        {10, 11, 12}),
+                       (pgen.sub([2, 3], [4, 5], [10, 11, 12],
+                                 [20, 21]), {10, 11, 12})):
+        opt = prog.optimize(live_out=live, verify=True)
+        # verification must not change what the optimizer produces
+        assert opt.key == prog.optimize(live_out=live).key
+
+
+def test_rogue_footprint_pass_rejected():
+    def rogue(slots, live_out=None):
+        extra = isa.Instr(dst_row=97, truth_table=isa.TT_ONE, wp1_en=1,
+                          c_rst=1)
+        return list(slots) + [(extra,)]
+
+    src = pgen.add([2, 3], [4, 5], [6, 7, 8])
+    with pytest.raises(VerificationError) as exc:
+        src.optimize(passes=[rogue], verify=True)
+    assert PASS_FOOTPRINT in exc.value.codes
+    assert 97 in exc.value.diagnostics[0].rows
+
+
+def test_rogue_value_pass_rejected():
+    def rogue(slots, live_out=None):
+        out = list(slots)
+        i = out[0][0]
+        out[0] = (dataclasses.replace(i,
+                                      truth_table=i.truth_table ^ 0b1111),)
+        return out
+
+    src = pgen.add([2, 3], [4, 5], [6, 7, 8])
+    with pytest.raises(VerificationError) as exc:
+        src.optimize(passes=[rogue], verify=True)
+    assert PASS_VALUE in exc.value.codes
+
+
+def test_rogue_latch_pass_rejected():
+    """A pass that appends a latch clear writes no memory rows (footprint
+    and values unchanged) but perturbs the final carry/mask state."""
+    def rogue(slots, live_out=None):
+        return list(slots) + [(isa.latch_clear(),)]
+
+    src = pgen.preset_carry() + pgen.store_carry(5)
+    with pytest.raises(VerificationError) as exc:
+        src.optimize(passes=[rogue], verify=True)
+    assert PASS_LATCH in exc.value.codes
+
+
+def test_dropping_a_live_write_is_rejected():
+    def rogue(slots, live_out=None):
+        return [s for i, s in enumerate(slots) if i != len(slots) - 1]
+
+    src = pgen.add([2, 3], [4, 5], [6, 7, 8])
+    with pytest.raises(VerificationError) as exc:
+        src.optimize(passes=[rogue], live_out={6, 7, 8}, verify=True)
+    assert PASS_VALUE in exc.value.codes or PASS_LATCH in exc.value.codes
+
+
+def test_validate_pass_accepts_identity():
+    src = pgen.mul([2, 3], [4, 5], [6, 7, 8, 9])
+    slots = [tuple(s) for s in src.slots]
+    assert verify.validate_pass(slots, slots, name="id") == []
+
+
+# ---------------------------------------------------------------------------
+# reference interpreter vs the execution engine (bit-exactness)
+# ---------------------------------------------------------------------------
+
+def _random_state(rng, n_blocks, lanes=N_COLS):
+    mem = rng.integers(0, 2, (n_blocks, N_ROWS, lanes), dtype=np.uint8)
+    mem[:, ROW_ZEROS, :] = 0
+    mem[:, ROW_ONES, :] = 1
+    carry = rng.integers(0, 2, (n_blocks, lanes), dtype=np.uint8)
+    mask = rng.integers(0, 2, (n_blocks, lanes), dtype=np.uint8)
+    return mem, carry, mask
+
+
+@pytest.mark.parametrize("n_blocks,chain", [(1, False), (2, True),
+                                            (2, False)])
+def test_reference_interpreter_matches_engine(n_blocks, chain):
+    """The translation validator's numpy interpreter is only trustworthy
+    if it matches the real engine cycle-for-cycle - including fused
+    co-issue slots, predication, and cross-block chained shifts."""
+    rng = np.random.default_rng(11)
+    progs = [
+        pgen.add([2, 3], [4, 5], [6, 7, 8]),
+        pgen.mul([2, 3], [4, 5], [6, 7, 8, 9]).optimize(
+            live_out={6, 7, 8, 9}),
+        pgen.select(True, [2, 3], [4, 5], [10, 11]),
+        pgen.shift_lanes([2, 3], [10, 11]),
+        pgen.div([2, 3], [4, 5], [10, 11], [12, 13],
+                 list(range(30, 37))).optimize(live_out={10, 11, 12, 13}),
+    ]
+    for prog in progs:
+        mem, carry, mask = _random_state(rng, n_blocks)
+        arr = ComefaArray(n_blocks=n_blocks, chain=chain,
+                          engine="reference")
+        arr.mem = mem.copy()
+        arr.carry = carry.copy()
+        arr.mask = mask.copy()
+        arr.run(prog)
+        ref_mem, ref_carry, ref_mask = verify.run_reference(
+            prog.slots, mem, carry, mask, chain=chain)
+        np.testing.assert_array_equal(arr.mem, ref_mem, err_msg=prog.name)
+        np.testing.assert_array_equal(arr.carry, ref_carry,
+                                      err_msg=prog.name)
+        np.testing.assert_array_equal(arr.mask, ref_mask,
+                                      err_msg=prog.name)
+
+
+# ---------------------------------------------------------------------------
+# structured diagnostics at the legacy raise sites
+# ---------------------------------------------------------------------------
+
+def test_specialize_missing_stream_value_diagnostic():
+    sym = pgen.fir_stream([2, 3], [10, 11, 12, 13], n_samples=2, x_bits=2)
+    with pytest.raises(ValueError, match="stream index") as exc:
+        ir.specialize_streams(sym, [1])
+    assert isinstance(exc.value, VerificationError)
+    assert STREAM_MISSING in exc.value.codes
+    assert exc.value.diagnostics[0].program == sym.name
+
+
+def test_specialize_value_out_of_range_diagnostic():
+    sym = pgen.fir_stream([2, 3], [10, 11, 12, 13], n_samples=1, x_bits=2)
+    with pytest.raises(ValueError, match="out of range") as exc:
+        ir.specialize_streams(sym, [9])
+    assert STREAM_RANGE in exc.value.codes
+
+
+def test_unknown_recode_diagnostic():
+    with pytest.raises(ValueError, match="unknown recode") as exc:
+        ir.recode_digits(3, 4, recode="nope")
+    assert STREAM_RECODE in exc.value.codes
+
+
+def test_signed_digits_without_neg_scratch_diagnostic():
+    sym = pgen.fir_stream([2, 3], [10, 11, 12, 13], n_samples=1, x_bits=3)
+    with pytest.raises(ValueError, match="neg") as exc:
+        ir.specialize_streams(sym, [3], recode="booth")
+    assert STREAM_DIGITS in exc.value.codes
+    assert exc.value.diagnostics[0].slot is not None
+
+
+def test_concat_rejects_non_instruction_input():
+    with pytest.raises(ValueError) as exc:
+        ir.concat_programs([pgen.store_carry(5), ["not-an-instr"]])
+    assert isinstance(exc.value, VerificationError)
+    assert CONCAT_INPUT in exc.value.codes
+    assert exc.value.diagnostics[0].slot == 1
+
+
+def test_diagnostic_str_carries_location():
+    d = Diagnostic(code=PORT_RACE, message="boom", program="p", slot=3,
+                   rows=(9, 4))
+    s = str(d)
+    assert "port-race" in s and "p[slot 3]" in s and "[4, 9]" in s
+    assert d.rows == (4, 9)            # rows are kept sorted
+
+
+# ---------------------------------------------------------------------------
+# the REPRO_COMEFA_VERIFY pre-encode hook
+# ---------------------------------------------------------------------------
+
+def _racy_program():
+    host = isa.Instr(src1_row=1, src2_row=2, dst_row=9,
+                     truth_table=isa.TT_XOR, wp1_en=1, c_rst=1)
+    rider = isa.Instr(dst_row=9, wp2_en=1, w2_sel=isa.W2_ZERO)
+    return ir.Program.from_slots([(host, rider)], name="racy")
+
+
+def test_hook_disabled_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_COMEFA_VERIFY", raising=False)
+    assert not verify.verify_enabled()
+    arr = ComefaArray(engine="reference")
+    arr.run(_racy_program())           # simulator-deterministic: W2 wins
+
+
+def test_hook_rejects_hazard_program(monkeypatch):
+    monkeypatch.setenv("REPRO_COMEFA_VERIFY", "1")
+    verify._checked_keys.clear()
+    arr = ComefaArray(engine="reference")
+    with pytest.raises(VerificationError) as exc:
+        arr.run(_racy_program())
+    assert PORT_RACE in exc.value.codes
+
+
+def test_hook_passes_clean_program_and_caches(monkeypatch):
+    monkeypatch.setenv("REPRO_COMEFA_VERIFY", "1")
+    verify._checked_keys.clear()
+    prog = pgen.add([2, 3], [4, 5], [6, 7, 8])
+    arr = ComefaArray(engine="reference")
+    arr.run(prog)
+    assert prog.key in verify._checked_keys
+    arr.run(prog)                      # second run hits the verify cache
+
+
+def test_hook_exempts_raw_instruction_lists(monkeypatch):
+    """Property suites drive the bare simulator with raw Instr lists that
+    deliberately sit below the IR contract (e.g. reserved-row writes);
+    the hook must not intercept them."""
+    monkeypatch.setenv("REPRO_COMEFA_VERIFY", "1")
+    raw = [isa.Instr(src1_row=ROW_ONES, dst_row=ROW_ZEROS,
+                     truth_table=isa.TT_COPY_A, wp1_en=1, c_rst=1)]
+    arr = ComefaArray(engine="reference")
+    arr.run(raw)                       # no VerificationError
+
+
+def test_hook_checks_run_programs_batch(monkeypatch):
+    monkeypatch.setenv("REPRO_COMEFA_VERIFY", "1")
+    verify._checked_keys.clear()
+    arr = ComefaArray(engine="reference")
+    with pytest.raises(VerificationError):
+        arr.run_programs([_racy_program()])
+    # warning-severity boundary findings do not raise
+    arr2 = ComefaArray(engine="reference")
+    arr2.run_programs(
+        [pgen.preset_carry(), pgen.store_carry(5)], reset_latches=False)
