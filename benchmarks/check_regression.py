@@ -29,6 +29,28 @@ def _wallclock_rows(payload: dict, pattern: str) -> dict:
             if r["name"].startswith(pattern) and r["us_per_call"] > 0}
 
 
+def check_trace_overhead(payload: dict, max_frac: float) -> list:
+    """Gate the tracing-disabled overhead rows (absolute, not vs base).
+
+    ``sim_speed.py`` prices the NULL_SPAN no-op path every dispatch
+    crosses when ``REPRO_COMEFA_TRACE`` is unset and reports it as a
+    fraction of the packed-engine dispatch in rows named
+    ``*trace_disabled_overhead_frac``.  Observability must stay free
+    when off: any such row above ``max_frac`` fails the gate.
+    """
+    failures = []
+    for r in payload["rows"]:
+        if not r["name"].endswith("trace_disabled_overhead_frac"):
+            continue
+        frac = r["derived"]
+        status = "TOO HIGH " if frac > max_frac else "ok"
+        print(f"  {status:9s} {r['name']}: {frac:.4%} of dispatch "
+              f"(max {max_frac:.0%})")
+        if frac > max_frac:
+            failures.append((r["name"], frac))
+    return failures
+
+
 def check(current: dict, baseline: dict, pattern: str,
           tolerance: float) -> list:
     """Return the list of (name, base_us, cur_us, ratio) regressions."""
@@ -58,6 +80,9 @@ def main(argv=None) -> int:
                     help="gate rows whose name starts with this prefix")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional slowdown (0.25 = +25%%)")
+    ap.add_argument("--trace-overhead-max", type=float, default=0.02,
+                    help="max tracing-disabled overhead fraction of a "
+                         "dispatch (0.02 = 2%%)")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
@@ -66,9 +91,15 @@ def main(argv=None) -> int:
     print(f"gating '{args.pattern}*' wall-clock rows at "
           f"+{args.tolerance:.0%}:")
     regressions = check(current, baseline, args.pattern, args.tolerance)
-    if regressions:
-        print(f"FAIL: {len(regressions)} row(s) regressed beyond "
-              f"+{args.tolerance:.0%}")
+    print("gating tracing-disabled overhead:")
+    overhead = check_trace_overhead(current, args.trace_overhead_max)
+    if regressions or overhead:
+        if regressions:
+            print(f"FAIL: {len(regressions)} row(s) regressed beyond "
+                  f"+{args.tolerance:.0%}")
+        if overhead:
+            print(f"FAIL: {len(overhead)} tracing-overhead row(s) above "
+                  f"{args.trace_overhead_max:.0%}")
         return 1
     print("all gated rows within tolerance")
     return 0

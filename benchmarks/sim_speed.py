@@ -173,6 +173,27 @@ def run(rows: list) -> None:
     rows.append(("sim/grid_g8_engine_pallas_interpret_us", us_eng_pallas,
                  us_eng_pallas, None))
 
+    # tracing-disabled overhead: every dispatch crosses a handful of
+    # obs spans (run + dispatch + host-sync + encode probe) and counter
+    # bumps; with REPRO_COMEFA_TRACE unset each span is the shared
+    # NULL_SPAN no-op.  Price that no-op path directly and express it as
+    # a fraction of the packed-engine dispatch above - check_regression
+    # gates the fraction (default < 2%).
+    from repro.obs import trace as obs_trace
+    assert not obs_trace.enabled(), \
+        "overhead row must be measured with tracing off"
+    probe = block._DISPATCHES
+    spans_per_dispatch = 4
+    n_probe = 10_000
+    t0 = time.perf_counter()
+    for _ in range(n_probe):
+        with obs_trace.span("bench.noop"):
+            probe.inc(kind="bench", engine="noop")
+    per_span_us = (time.perf_counter() - t0) / n_probe * 1e6
+    frac = spans_per_dispatch * per_span_us / us_eng_packed
+    rows.append(("sim/grid_g8_trace_disabled_overhead_frac", 0.0,
+                 frac, None))
+
     # modelled CoMeFa-D hardware time for the same program, for scale
     hw_us = timing.mul_cycles(n) / 588e6 * 1e6
     rows.append(("sim/mul8_hw_us_comefa_d", 0.0, hw_us, None))
@@ -286,7 +307,15 @@ def run(rows: list) -> None:
 
 
 def _rows_as_json(rows: list) -> dict:
-    """Machine-readable form of the benchmark rows (nightly artifact)."""
+    """Machine-readable form of the benchmark rows (nightly artifact).
+
+    Besides the timing rows, the payload carries a ``metrics`` block:
+    the `repro.obs.metrics` registry summary accumulated while the
+    benchmarks ran (encode-cache hit rates, host syncs, per-engine
+    dispatch counts) - so one artifact answers both "how fast" and
+    "what did the run actually do".
+    """
+    from repro.obs import export as obs_export
     return {
         "benchmark": "sim_speed",
         "columns": ["name", "us_per_call", "derived", "paper"],
@@ -294,6 +323,7 @@ def _rows_as_json(rows: list) -> dict:
             {"name": name, "us_per_call": us, "derived": derived,
              "paper": paper}
             for name, us, derived, paper in rows],
+        "metrics": obs_export.metrics_summary(),
     }
 
 

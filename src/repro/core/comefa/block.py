@@ -49,18 +49,43 @@ from __future__ import annotations
 
 import functools
 import os
+from collections.abc import MutableMapping
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import metrics as obs_metrics
+from ...obs import trace as obs_trace
 from . import ir, isa, verify
 from .isa import (COL_MUX, N_COLS, N_ROWS, ROW_ONES, WORD_BITS,
                   encode_program)
 
 # field indices in the encoded program matrix
 _F = {name: i for i, name in enumerate(isa.ENGINE_FIELD_NAMES)}
+
+# telemetry handles (repro.obs default registry).  Label schemas:
+#   comefa.encode_cache{event=hits|misses|device_hits|device_misses}
+#   comefa.host_syncs / comefa.device_puts {kind=array|grid}
+#   comefa.dispatches / comefa.dispatch_cycles {kind=..., engine=...}
+#   comefa.engine_select{engine=...}
+_ENCODE_EVENTS = obs_metrics.counter("comefa.encode_cache")
+_HOST_SYNCS = obs_metrics.counter("comefa.host_syncs")
+_DEVICE_PUTS = obs_metrics.counter("comefa.device_puts")
+_DISPATCHES = obs_metrics.counter("comefa.dispatches")
+_DISPATCH_CYCLES = obs_metrics.counter("comefa.dispatch_cycles")
+_ENGINE_SELECT = obs_metrics.counter("comefa.engine_select")
+
+
+def _prog_label(program) -> str:
+    """Short span label for any program form (IR, Instr list, matrix)."""
+    name = getattr(program, "name", None)
+    if name:
+        return str(name)
+    if isinstance(program, np.ndarray):
+        return f"matrix[{program.shape[0]}]"
+    return type(program).__name__
 
 # encoded one-cycle latch reset, inserted at `run_programs` boundaries
 _LATCH_CLEAR_MAT = np.array([isa.latch_clear().engine_vector()],
@@ -279,9 +304,12 @@ def get_engine(name=None):
     if not isinstance(name, str):
         return name
     if name == "reference":
+        _ENGINE_SELECT.inc(engine="reference")
         return _REFERENCE_ENGINE
     from . import engine_packed      # deferred: optional Pallas dep inside
-    return engine_packed.get_engine(name)
+    engine = engine_packed.get_engine(name)
+    _ENGINE_SELECT.inc(engine=engine.name)
+    return engine
 
 
 # ---------------------------------------------------------------------------
@@ -290,17 +318,60 @@ def get_engine(name=None):
 
 _ENCODE_CACHE: dict = {}
 _ENCODE_CACHE_MAX = 512
-ENCODE_CACHE_STATS = {"hits": 0, "misses": 0,
-                      "device_hits": 0, "device_misses": 0}
+
+
+class _EncodeCacheStats(MutableMapping):
+    """Legacy dict facade over the ``comefa.encode_cache`` counter.
+
+    The module-level ``ENCODE_CACHE_STATS`` dict predates the telemetry
+    registry and leaked across tests (no reset path).  The counts now
+    live in `repro.obs.metrics` (series keyed by ``event=``) where
+    ``obs.metrics.reset()`` zeroes them; this view keeps every existing
+    reader/writer working - ``stats["hits"]``, ``.update(hits=0)``,
+    ``stats == {...}`` - while new code should read the registry.
+    """
+
+    _KEYS = ("hits", "misses", "device_hits", "device_misses")
+
+    def __getitem__(self, key):
+        if key not in self._KEYS:
+            raise KeyError(key)
+        return int(_ENCODE_EVENTS.value(event=key))
+
+    def __setitem__(self, key, value):
+        if key not in self._KEYS:
+            raise KeyError(key)
+        _ENCODE_EVENTS.set(int(value), event=key)
+
+    def __delitem__(self, key):
+        raise TypeError("encode-cache stats keys are fixed")
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self):
+        return len(self._KEYS)
+
+    def __eq__(self, other):
+        if isinstance(other, (dict, MutableMapping)):
+            return dict(self) == dict(other)
+        return NotImplemented
+
+    def __repr__(self):
+        return f"ENCODE_CACHE_STATS({dict(self)!r})"
+
+
+ENCODE_CACHE_STATS = _EncodeCacheStats()
 
 
 def _encode_cached(key, producer) -> np.ndarray:
     mat = _ENCODE_CACHE.get(key)
     if mat is not None:
-        ENCODE_CACHE_STATS["hits"] += 1
+        _ENCODE_EVENTS.inc(event="hits")
         return mat
-    ENCODE_CACHE_STATS["misses"] += 1
-    mat = producer()
+    _ENCODE_EVENTS.inc(event="misses")
+    with obs_trace.span("comefa.encode"):
+        mat = producer()
     # Freeze before caching: the matrix is shared with every later caller,
     # so an in-place edit by one would silently corrupt all future runs of
     # the same program.  Mutation now raises instead.
@@ -382,9 +453,9 @@ def device_mat(mat: np.ndarray):
         return jnp.asarray(mat)
     entry = _DEVICE_MAT_CACHE.get(id(mat))
     if entry is not None:
-        ENCODE_CACHE_STATS["device_hits"] += 1
+        _ENCODE_EVENTS.inc(event="device_hits")
         return entry[1]
-    ENCODE_CACHE_STATS["device_misses"] += 1
+    _ENCODE_EVENTS.inc(event="device_misses")
     dev = jnp.asarray(mat)
     if len(_DEVICE_MAT_CACHE) >= _DEVICE_MAT_CACHE_MAX:
         _DEVICE_MAT_CACHE.pop(next(iter(_DEVICE_MAT_CACHE)))
@@ -436,10 +507,12 @@ class ComefaArray:
         accesses after one sync are free; the next dispatch re-uploads.
         """
         if self._dev is not None:
-            self._mem, self._carry, self._mask = self.engine.to_host(
-                self._dev)
+            with obs_trace.span("array.host_sync", engine=self.engine.name):
+                self._mem, self._carry, self._mask = self.engine.to_host(
+                    self._dev)
             self._dev = None
             self.host_syncs += 1
+            _HOST_SYNCS.inc(kind="array")
 
     @property
     def mem(self) -> np.ndarray:
@@ -504,7 +577,11 @@ class ComefaArray:
         encoding goes through the keyed cache, so repeated kernel
         invocations of structurally equal programs skip re-encoding.
         """
-        return self._dispatch(encoded(program))
+        with obs_trace.span("array.run",
+                            program=_prog_label(program)) as sp:
+            cycles = self._dispatch(encoded(program))
+            sp.set(cycles=cycles)
+        return cycles
 
     def run_programs(self, programs, reset_latches: bool = True) -> List[int]:
         """Execute several programs back-to-back in ONE scan dispatch.
@@ -523,21 +600,29 @@ class ComefaArray:
         is cycle-for-cycle identical to sequential `run()` calls).
         """
         programs = list(programs)
-        verify.maybe_verify_batch(programs, reset_latches)
-        mats = [encoded(p) for p in programs]
-        if not mats:
-            return []
-        mat, counts = _concat_encoded(mats, reset_latches)
-        self._dispatch(mat)
+        with obs_trace.span("array.run_programs", n=len(programs)) as sp:
+            verify.maybe_verify_batch(programs, reset_latches)
+            mats = [encoded(p) for p in programs]
+            if not mats:
+                return []
+            mat, counts = _concat_encoded(mats, reset_latches)
+            sp.set(cycles=self._dispatch(mat))
         return counts
 
     def _dispatch(self, mat: np.ndarray) -> int:
         if mat.shape[0] == 0:
             return 0
-        if self._dev is None:
-            self._dev = self.engine.to_device(self._mem, self._carry,
-                                              self._mask)
-            self.device_puts += 1
-        self._dev = self.engine.run(self._dev, device_mat(mat), self.chain)
+        engine = self.engine
+        with obs_trace.span("array.dispatch", engine=engine.name,
+                            cycles=int(mat.shape[0])):
+            if self._dev is None:
+                self._dev = engine.to_device(self._mem, self._carry,
+                                             self._mask)
+                self.device_puts += 1
+                _DEVICE_PUTS.inc(kind="array")
+            self._dev = engine.run(self._dev, device_mat(mat), self.chain)
         self.cycles += int(mat.shape[0])
+        _DISPATCHES.inc(kind="array", engine=engine.name)
+        _DISPATCH_CYCLES.inc(int(mat.shape[0]), kind="array",
+                             engine=engine.name)
         return int(mat.shape[0])

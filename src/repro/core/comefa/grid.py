@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import trace as obs_trace
 from . import block, isa, verify
 from .block import (ComefaArray, encoded, read_port_word, write_port_word)
 from .isa import N_COLS, N_ROWS, ROW_ONES
@@ -149,10 +150,14 @@ class ComefaGrid:
     # result in place via slot views / placements)
     def _sync_host(self) -> None:
         if self._dev is not None:
-            self._mem, self._carry, self._mask = self._active_engine(
-            ).to_host(self._dev)
+            engine = self._active_engine()
+            with obs_trace.span("grid.host_sync", engine=engine.name,
+                                slots=self.g):
+                self._mem, self._carry, self._mask = engine.to_host(
+                    self._dev)
             self._dev = None
             self.host_syncs += 1
+            block._HOST_SYNCS.inc(kind="grid")
 
     @property
     def mem(self) -> np.ndarray:
@@ -241,7 +246,11 @@ class ComefaGrid:
         """Execute one shared program on every slot.  Returns the per-slot
         processing cycles (identical across slots - one FSM, one stream).
         """
-        return self._dispatch(encoded(program))
+        with obs_trace.span("grid.run", program=block._prog_label(program),
+                            slots=self.g) as sp:
+            cycles = self._dispatch(encoded(program))
+            sp.set(cycles=cycles)
+        return cycles
 
     def run_programs(self, programs, reset_latches: bool = True) -> List[int]:
         """Back-to-back programs in ONE fused dispatch, across all slots.
@@ -252,12 +261,14 @@ class ComefaGrid:
         latches leak into the next.  Returns per-program cycle counts.
         """
         programs = list(programs)
-        verify.maybe_verify_batch(programs, reset_latches)
-        mats = [encoded(p) for p in programs]
-        if not mats:
-            return []
-        mat, counts = block._concat_encoded(mats, reset_latches)
-        self._dispatch(mat)
+        with obs_trace.span("grid.run_programs", n=len(programs),
+                            slots=self.g) as sp:
+            verify.maybe_verify_batch(programs, reset_latches)
+            mats = [encoded(p) for p in programs]
+            if not mats:
+                return []
+            mat, counts = block._concat_encoded(mats, reset_latches)
+            sp.set(cycles=self._dispatch(mat))
         return counts
 
     def run_per_slot(self, programs: Sequence) -> List[int]:
@@ -276,24 +287,32 @@ class ComefaGrid:
         cycle count.
         """
         assert len(programs) == self.g, (len(programs), self.g)
-        mats = [encoded(p) for p in programs]
-        counts = [int(m.shape[0]) for m in mats]
-        longest = max(counts, default=0)
-        if longest == 0:
-            return counts
-        # bucketed padding bounds the number of distinct scan lengths a
-        # sweep of value-dependent programs can trigger (each length is
-        # one jit trace)
-        t_pad = -(-longest // _SLOT_PAD_QUANTUM) * _SLOT_PAD_QUANTUM
-        stack = np.zeros((self.g, t_pad, isa.N_ENGINE_FIELDS),
-                         dtype=np.int32)   # zero fields == idle cycle
-        for g, m in enumerate(mats):
-            stack[g, :m.shape[0]] = m
-        engine = self._active_engine()
-        self._ensure_device(engine)
-        self._dev = engine.run_per_slot(self._dev,
-                                        self._device_prog(stack), self.chain)
-        self.cycles += longest
+        with obs_trace.span("grid.run_per_slot", slots=self.g) as sp:
+            mats = [encoded(p) for p in programs]
+            counts = [int(m.shape[0]) for m in mats]
+            longest = max(counts, default=0)
+            if longest == 0:
+                return counts
+            # bucketed padding bounds the number of distinct scan lengths a
+            # sweep of value-dependent programs can trigger (each length is
+            # one jit trace)
+            t_pad = -(-longest // _SLOT_PAD_QUANTUM) * _SLOT_PAD_QUANTUM
+            stack = np.zeros((self.g, t_pad, isa.N_ENGINE_FIELDS),
+                             dtype=np.int32)   # zero fields == idle cycle
+            for g, m in enumerate(mats):
+                stack[g, :m.shape[0]] = m
+            engine = self._active_engine()
+            # makespan = the longest real program: slices run concurrently,
+            # the slowest bounds the dispatch
+            sp.set(engine=engine.name, makespan=longest,
+                   min_slot_cycles=min(counts), padded_to=t_pad)
+            self._ensure_device(engine)
+            self._dev = engine.run_per_slot(
+                self._dev, self._device_prog(stack), self.chain)
+            self.cycles += longest
+            block._DISPATCHES.inc(kind="grid", engine=engine.name)
+            block._DISPATCH_CYCLES.inc(longest, kind="grid",
+                                       engine=engine.name)
         return counts
 
     def _active_engine(self):
@@ -322,6 +341,7 @@ class ComefaGrid:
                    jax.device_put(dev[2], s_latch))
         self._dev = dev
         self.device_puts += 1
+        block._DEVICE_PUTS.inc(kind="grid")
 
     def _device_prog(self, prog: np.ndarray):
         """Program matrix as a device array (sharded when a mesh is set).
@@ -340,9 +360,15 @@ class ComefaGrid:
         if mat.shape[0] == 0:
             return 0
         engine = self._active_engine()
-        self._ensure_device(engine)
-        self._dev = engine.run(self._dev, self._device_prog(mat), self.chain)
+        with obs_trace.span("grid.dispatch", engine=engine.name,
+                            slots=self.g, cycles=int(mat.shape[0])):
+            self._ensure_device(engine)
+            self._dev = engine.run(self._dev, self._device_prog(mat),
+                                   self.chain)
         self.cycles += int(mat.shape[0])
+        block._DISPATCHES.inc(kind="grid", engine=engine.name)
+        block._DISPATCH_CYCLES.inc(int(mat.shape[0]), kind="grid",
+                                   engine=engine.name)
         return int(mat.shape[0])
 
     def __repr__(self):

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ...obs import trace as obs_trace
 from . import ir, layout, program, timing
 from .ir import Operand, Program, RowAllocator
 from .isa import COL_MUX, N_COLS, USABLE_ROWS, ceil_log2
@@ -155,6 +156,31 @@ class Schedule:
         """
         from . import verify as _verify   # deferred: verify imports ir
         return _verify.verify_schedule(self)
+
+    def emit_trace(self, track: int = 0, base_cycle: int = 0,
+                   name: Optional[str] = None) -> int:
+        """Emit this timeline onto the tracer's modeled-cycles track.
+
+        Every nonzero phase span becomes one `obs.trace.model_span`
+        (ts/dur in cycles, offset by ``base_cycle``) named
+        ``<name>/<phase>``, tagged with its tile index.  ``track``
+        separates concurrent timelines - per-slot grid schedules pass
+        their slot index so Perfetto renders the G pipelines side by
+        side, load/compute/unload overlap visible per tile.  No-op when
+        tracing is disabled; returns the number of spans emitted.
+        """
+        if not obs_trace.enabled():
+            return 0
+        label = name if name is not None else self.name
+        emitted = 0
+        for s in self.timeline():
+            if s.cycles == 0:
+                continue
+            obs_trace.model_span(f"{label}/{s.kind}", base_cycle + s.start,
+                                 s.cycles, track_id=track, tile=s.tile,
+                                 phase=s.kind)
+            emitted += 1
+        return emitted
 
     def __repr__(self):
         return (f"Schedule({self.name!r}: {self.n_tiles} tiles, "

@@ -60,6 +60,7 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import ir, isa
+from ...obs import trace as obs_trace
 from .diagnostics import (BUFFER_LAG, ERROR, PASS_FOOTPRINT, PASS_LATCH,
                           PASS_VALUE, PHASE_ORDER, PORT_RACE, REGION_OVERLAP,
                           REGION_RESERVED, RESERVED_WRITE, SEAM_SHIFT,
@@ -560,7 +561,11 @@ def maybe_verify(program) -> None:
     key = program.key
     if key in _checked_keys:
         return
-    assert_verified(program)
+    # span the cold path only: cached keys cost a set lookup, so the
+    # verifier latency the trace shows is the real per-program scan
+    with obs_trace.span("comefa.verify",
+                        program=getattr(program, "name", "") or "?"):
+        assert_verified(program)
     if len(_checked_keys) >= _CHECKED_MAX:
         _checked_keys.clear()
     _checked_keys.add(key)

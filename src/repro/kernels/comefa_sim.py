@@ -32,6 +32,12 @@ from ..core.comefa import ir as ir_mod
 from ..core.comefa.ir import Program, RowAllocator
 from ..core.comefa.isa import (Instr, N_ROWS, PRED_MASK, RESERVED_ROWS,
                                TT_COPY_A, USABLE_ROWS, ceil_log2)
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+
+# modelled compute cycles per kernel invocation; the registry-side home of
+# the legacy ``stats={"cycles": ...}`` side channel (which keeps working)
+_KERNEL_CYCLES = obs_metrics.counter("comefa.kernel_cycles")
 
 # shape-keyed cache of built + optimized programs (the expensive part is
 # Python-side generation; the engine-matrix encode cache in `block.py`
@@ -117,14 +123,24 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
     arr = ComefaArray(n_blocks=nb, engine=engine)
-    for tile in plan.tiles():
-        buf = plan.buffers[tile.buffer]
-        for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
-            wj = np.pad(w[j], (0, pad)).reshape(nb, lanes)
-            rows = buf.weight_rows(j_local, w_bits)
-            layout.place(arr, wj, rows.base, w_bits)
-        arr.run(plan.tile_program(tile, x[tile.k_start:tile.k_end],
-                                  optimized=optimized, recode=recode))
+    costs = []
+    with obs_trace.span("kernel.gemv", k=k, n=n, recode=recode) as sp:
+        for tile in plan.tiles():
+            buf = plan.buffers[tile.buffer]
+            for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
+                wj = np.pad(w[j], (0, pad)).reshape(nb, lanes)
+                rows = buf.weight_rows(j_local, w_bits)
+                layout.place(arr, wj, rows.base, w_bits)
+            prog = plan.tile_program(tile, x[tile.k_start:tile.k_end],
+                                     optimized=optimized, recode=recode)
+            arr.run(prog)
+            if obs_trace.enabled():
+                costs.append((plan.load_cycles(tile), prog.cycles,
+                              plan.unload_cycles(tile)))
+        sp.set(cycles=arr.cycles)
+    _KERNEL_CYCLES.inc(arr.cycles, kernel="gemv", mode=recode)
+    if costs:
+        schedule.Schedule(costs, name=f"gemv_k{k}").emit_trace()
     out = layout.extract(arr, plan.acc.base, acc_bits)
     return out.reshape(-1)[:n]
 
@@ -157,21 +173,27 @@ def comefa_gemm(a: np.ndarray, b: np.ndarray, *, bits: int,
     lane_plan = plan.lane_plan()
     arr = ComefaArray(n_blocks=plan.n_blocks, chain=True, engine=engine)
     out = np.empty(plan.n_outputs, dtype=np.int64)
-    for tile in plan.tiles():
-        buf = plan.buffers[tile.buffer]
-        xv, yv = plan.tile_operands(tile, a, b)
-        lane_plan.place(arr, xv, buf.x.base, bits)
-        lane_plan.place(arr, yv, buf.y.base, bits)
-        arr.run(plan.compute_program(tile.buffer, optimized=optimized))
-        heads = plan.head_lanes(tile)
-        vals = np.empty(tile.n_dots, dtype=np.int64)
-        for blk in range(plan.n_blocks):
-            sel = (heads // N_COLS) == blk
-            if sel.any():
-                vals[sel] = layout.extract(arr, buf.acc.base, plan.acc_bits,
-                                           lanes=heads[sel] % N_COLS,
-                                           block=blk)
-        out[tile.out_start:tile.out_end] = vals
+    with obs_trace.span("kernel.gemm", m=m, k=k, n=n, bits=bits) as sp:
+        for tile in plan.tiles():
+            buf = plan.buffers[tile.buffer]
+            xv, yv = plan.tile_operands(tile, a, b)
+            lane_plan.place(arr, xv, buf.x.base, bits)
+            lane_plan.place(arr, yv, buf.y.base, bits)
+            arr.run(plan.compute_program(tile.buffer, optimized=optimized))
+            heads = plan.head_lanes(tile)
+            vals = np.empty(tile.n_dots, dtype=np.int64)
+            for blk in range(plan.n_blocks):
+                sel = (heads // N_COLS) == blk
+                if sel.any():
+                    vals[sel] = layout.extract(arr, buf.acc.base,
+                                               plan.acc_bits,
+                                               lanes=heads[sel] % N_COLS,
+                                               block=blk)
+            out[tile.out_start:tile.out_end] = vals
+        sp.set(cycles=arr.cycles)
+    _KERNEL_CYCLES.inc(arr.cycles, kernel="gemm", mode="chained")
+    if obs_trace.enabled():
+        plan.schedule(optimized=optimized).emit_trace()
     return out.reshape(m, n)
 
 
@@ -431,6 +453,10 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     mode.  Pass `mesh` to shard the grid axis; a `stats` dict receives
     the grid's modelled compute ``cycles`` (the per-slot lockstep /
     makespan count - how the benchmark rows compare the two modes).
+    The same count also lands in the ``comefa.kernel_cycles`` counter
+    (labels ``kernel="gemv_batched"``, ``mode``) of the
+    `repro.obs.metrics` registry - prefer that for new callers; the
+    ``stats`` side channel is kept for compatibility.
     """
     w = np.asarray(w)
     x = np.asarray(x)
@@ -454,19 +480,35 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
     grid = ComefaGrid(G, n_blocks=nb, mesh=mesh, engine=engine)
-    for tile in plan.tiles():
-        buf = plan.buffers[tile.buffer]
-        for g in range(G):
-            slot = grid.slot(g)
-            for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
-                wj = np.pad(w[g, j], (0, pad)).reshape(nb, lanes)
-                rows = buf.weight_rows(j_local, w_bits)
-                layout.place(slot, wj, rows.base, w_bits)
-                assert 0 <= int(x[g, j]) < (1 << x_bits)
-                layout.place(slot, np.full(lanes, int(x[g, j])),
-                             x_rows[j_local].base, x_bits)
-        grid.run(_gemv_batched_chunk_program(plan, tile, x_rows,
-                                             optimized=optimized))
+    costs = []
+    with obs_trace.span("kernel.gemv_batched", slots=G, k=k, n=n,
+                        mode="broadcast") as sp:
+        for tile in plan.tiles():
+            buf = plan.buffers[tile.buffer]
+            for g in range(G):
+                slot = grid.slot(g)
+                for j_local, j in enumerate(range(tile.k_start,
+                                                  tile.k_end)):
+                    wj = np.pad(w[g, j], (0, pad)).reshape(nb, lanes)
+                    rows = buf.weight_rows(j_local, w_bits)
+                    layout.place(slot, wj, rows.base, w_bits)
+                    assert 0 <= int(x[g, j]) < (1 << x_bits)
+                    layout.place(slot, np.full(lanes, int(x[g, j])),
+                                 x_rows[j_local].base, x_bits)
+            prog = _gemv_batched_chunk_program(plan, tile, x_rows,
+                                               optimized=optimized)
+            grid.run(prog)
+            if obs_trace.enabled():
+                costs.append((plan.load_cycles(tile), prog.cycles,
+                              plan.unload_cycles(tile)))
+        sp.set(cycles=grid.cycles)
+    _KERNEL_CYCLES.inc(grid.cycles, kernel="gemv_batched",
+                       mode="broadcast")
+    if costs:
+        # the broadcast chunk program is shared by every slot, so one
+        # timeline stands in for all G lockstep pipelines
+        schedule.Schedule(costs, name=f"gemv_k{k}").emit_trace(
+            name=f"broadcast_g{G}/gemv_k{k}")
     if stats is not None:
         stats["cycles"] = grid.cycles
     out = np.empty((G, n), dtype=np.int64)
@@ -494,18 +536,37 @@ def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
     grid = ComefaGrid(G, n_blocks=nb, mesh=mesh, engine=engine)
-    for tile in plan.tiles():
-        buf = plan.buffers[tile.buffer]
+    costs = [[] for _ in range(G)]
+    with obs_trace.span("kernel.gemv_batched", slots=G, k=k, n=n,
+                        mode="per_slot", recode=recode) as sp:
+        for tile in plan.tiles():
+            buf = plan.buffers[tile.buffer]
+            for g in range(G):
+                slot = grid.slot(g)
+                for j_local, j in enumerate(range(tile.k_start,
+                                                  tile.k_end)):
+                    wj = np.pad(w[g, j], (0, pad)).reshape(nb, lanes)
+                    rows = buf.weight_rows(j_local, w_bits)
+                    layout.place(slot, wj, rows.base, w_bits)
+            progs = [
+                plan.tile_program(tile, x[g, tile.k_start:tile.k_end],
+                                  optimized=optimized, recode=recode)
+                for g in range(G)]
+            grid.run_per_slot(progs)
+            if obs_trace.enabled():
+                for g in range(G):
+                    costs[g].append((plan.load_cycles(tile),
+                                     progs[g].cycles,
+                                     plan.unload_cycles(tile)))
+        sp.set(cycles=grid.cycles)
+    _KERNEL_CYCLES.inc(grid.cycles, kernel="gemv_batched",
+                       mode="per_slot")
+    if obs_trace.enabled():
+        # one model track per slot: Perfetto shows the G digit-stream
+        # pipelines side by side, makespan = the slowest slot's timeline
         for g in range(G):
-            slot = grid.slot(g)
-            for j_local, j in enumerate(range(tile.k_start, tile.k_end)):
-                wj = np.pad(w[g, j], (0, pad)).reshape(nb, lanes)
-                rows = buf.weight_rows(j_local, w_bits)
-                layout.place(slot, wj, rows.base, w_bits)
-        grid.run_per_slot([
-            plan.tile_program(tile, x[g, tile.k_start:tile.k_end],
-                              optimized=optimized, recode=recode)
-            for g in range(G)])
+            schedule.Schedule(costs[g], name=f"gemv_k{k}").emit_trace(
+                track=g, name=f"slot{g}/gemv_k{k}")
     if stats is not None:
         stats["cycles"] = grid.cycles
     out = np.empty((G, n), dtype=np.int64)

@@ -1,0 +1,32 @@
+"""Unified telemetry for the CoMeFa stack: metrics, tracing, exporters.
+
+The paper's headline numbers are cycle accounting plus overlap
+scheduling; this package is how the repo *measures* both without ad-hoc
+side channels:
+
+  * `metrics`  - a zero-dependency, thread-safe registry of named
+    counters / gauges / histograms with labels.  It absorbs the legacy
+    `block.ENCODE_CACHE_STATS` dict and the `host_syncs`/`device_puts`
+    instance counters behind one `snapshot()`/`reset()` surface.
+  * `trace`    - span-based tracing: `span(name, **attrs)` context
+    managers on the wall-clock track, `model_span(...)` cycle-domain
+    spans on the modeled-cycles track, both into one bounded ring
+    buffer.  Default OFF with near-zero overhead; armed by
+    ``REPRO_COMEFA_TRACE=path.json``.
+  * `export`   - Chrome trace-event JSON (open in Perfetto / about:
+    tracing: wall-clock and modeled-cycles as two processes, so LCU
+    overlap is *visible*) and a flat metrics summary for the nightly
+    benchmark artifact.
+
+``python -m repro.obs`` runs a small traced grid GEMV sweep and writes
+a sample trace + metrics dump (the nightly artifact smoke path).
+"""
+from . import export, metrics, trace
+from .metrics import Counter, Gauge, Histogram, Registry
+from .trace import Tracer, model_span, span
+
+__all__ = [
+    "export", "metrics", "trace",
+    "Counter", "Gauge", "Histogram", "Registry",
+    "Tracer", "span", "model_span",
+]

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from ..models import lm
 from ..models.common import Config
+from ..obs import trace as obs_trace
 from ..parallel import sharding as shd
 
 
@@ -32,8 +33,10 @@ def prefill(params, tokens, cfg: Config, max_len: int,
     caches are filled vectorised from the full-sequence K/V.
     """
     b, s = tokens.shape
-    logits, _ = lm.forward(params, tokens, cfg, enc_inputs=enc_inputs)
-    states = lm.decode_state_init(cfg, b, max_len)
+    with obs_trace.span("serve.prefill", batch=b, seq=s,
+                        family=cfg.family):
+        logits, _ = lm.forward(params, tokens, cfg, enc_inputs=enc_inputs)
+        states = lm.decode_state_init(cfg, b, max_len)
     return logits[:, -1:], states
 
 
@@ -59,19 +62,24 @@ def generate(params, prompt, cfg: Config, *, steps: int, max_len: int,
         else None
     states = lm.decode_state_init(cfg, b, max_len)
     # replay the prompt through the decode path to prime caches exactly
+    # (spans wrap the host-driven dispatch, never the jitted step body)
     tok = prompt[:, :1]
     logits = None
-    for t in range(s):
-        logits, states = lm.decode_step(params, prompt[:, t:t + 1], states,
-                                        jnp.int32(t), cfg, ctx=ctx)
+    with obs_trace.span("serve.prime", batch=b, seq=s,
+                        family=cfg.family):
+        for t in range(s):
+            logits, states = lm.decode_step(params, prompt[:, t:t + 1],
+                                            states, jnp.int32(t), cfg,
+                                            ctx=ctx)
     out = []
     tok = sample(logits, key)
     for t in range(steps):
         out.append(tok)
         key, sub = jax.random.split(key)
-        logits, states = lm.decode_step(params, tok[:, None], states,
-                                        jnp.int32(s + t), cfg, ctx=ctx)
-        tok = sample(logits, sub, temperature)
+        with obs_trace.span("serve.decode_step", step=t):
+            logits, states = lm.decode_step(params, tok[:, None], states,
+                                            jnp.int32(s + t), cfg, ctx=ctx)
+            tok = sample(logits, sub, temperature)
     return jnp.stack(out, axis=1)
 
 

@@ -1,0 +1,25 @@
+"""Shared fixtures: isolate the obs registry/tracer between tests.
+
+The metrics registry and tracer are process-wide singletons (that is
+what makes them cheap at the instrumentation sites), so without a reset
+every test would see counters accumulated by whichever tests ran before
+it - the exact global-state leakage the legacy module-level
+``block.ENCODE_CACHE_STATS`` dict suffered from.  `metrics.reset()`
+zeroes every series while keeping the module-level handles captured at
+import time valid, so instrumented code never notices.
+"""
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """Zero the metrics registry and park the tracer around every test."""
+    obs_metrics.reset()
+    yield
+    tracer = obs_trace.get_tracer()
+    tracer.enabled = False
+    tracer.path = None
+    tracer.clear()

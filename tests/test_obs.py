@@ -1,0 +1,341 @@
+"""The unified telemetry layer: metrics registry, tracer, exporters.
+
+Covers the three `repro.obs` modules plus their integration with the
+CoMeFa stack:
+
+  * registry semantics - labelled counters/gauges/histograms, snapshot /
+    reset lifecycle, flatten, kind-mismatch errors, thread safety;
+  * the `block.ENCODE_CACHE_STATS` compatibility shim and the
+    two-independent-sessions regression the registry reset fixes;
+  * array-vs-grid parity of the registry-backed ``host_syncs`` /
+    ``device_puts`` counters against the legacy instance attributes;
+  * tracer behaviour - nesting under exceptions, disabled mode emitting
+    nothing (and costing one shared NULL_SPAN), the bounded ring buffer,
+    model-time spans from `Schedule.emit_trace`;
+  * Chrome trace export round-tripping through ``json.loads`` with valid
+    ``ph``/``ts``/``dur`` fields on both the wall-clock and
+    modeled-cycles processes;
+  * the ``REPRO_COMEFA_TRACE`` smoke path: a traced per-slot GEMV sweep
+    must produce a non-empty trace with both time domains present.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.comefa import (ComefaArray, ComefaGrid, block, layout,
+                               program, schedule)
+from repro.obs import export, metrics, trace
+
+BITS = 4
+
+
+def _mul_prog():
+    n = BITS
+    return program.mul(list(range(n)), list(range(n, 2 * n)),
+                       list(range(2 * n, 4 * n)))
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_labels_and_snapshot():
+    reg = metrics.Registry()
+    c = reg.counter("requests")
+    c.inc(kind="a")
+    c.inc(2, kind="b")
+    c.inc()
+    assert c.value(kind="a") == 1
+    assert c.value(kind="b") == 2
+    assert c.value() == 1
+    assert c.value(kind="missing") == 0
+    snap = reg.snapshot()
+    assert snap["requests"]["kind"] == "counter"
+    assert {"labels": {"kind": "b"}, "value": 2} \
+        in snap["requests"]["series"]
+    flat = metrics.flatten(snap)
+    assert flat["requests{kind=b}"] == 2
+    assert flat["requests"] == 1
+
+
+def test_label_order_is_canonical():
+    reg = metrics.Registry()
+    c = reg.counter("c")
+    c.inc(a="1", b="2")
+    c.inc(b="2", a="1")
+    assert c.value(a="1", b="2") == 2
+    assert len(c.series()) == 1
+
+
+def test_reset_keeps_handles_valid():
+    reg = metrics.Registry()
+    c = reg.counter("c")
+    c.inc(k="v")
+    reg.reset()
+    assert c.value(k="v") == 0
+    assert reg.snapshot() == {}        # empty series are omitted
+    c.inc(k="v")                       # the pre-reset handle still works
+    assert reg.counter("c").value(k="v") == 1
+
+
+def test_kind_mismatch_raises():
+    reg = metrics.Registry()
+    reg.counter("m")
+    with pytest.raises(TypeError):
+        reg.gauge("m")
+
+
+def test_gauge_and_histogram():
+    reg = metrics.Registry()
+    g = reg.gauge("g")
+    g.set(5, slot="0")
+    g.add(2, slot="0")
+    assert g.value(slot="0") == 7
+    h = reg.histogram("h")
+    for v in (1, 5, 3):
+        h.observe(v)
+    assert h.value() == {"count": 3, "sum": 9, "min": 1, "max": 5}
+    assert h.value(absent="x") == {"count": 0, "sum": 0, "min": 0,
+                                   "max": 0}
+    snap = reg.snapshot()
+    assert snap["h"]["series"][0]["value"]["count"] == 3
+
+
+def test_counter_thread_safety():
+    reg = metrics.Registry()
+    c = reg.counter("c")
+
+    def worker():
+        for _ in range(1000):
+            c.inc(kind="t")
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value(kind="t") == 8000
+
+
+# ---------------------------------------------------------------------------
+# ENCODE_CACHE_STATS compatibility shim + the global-state regression
+# ---------------------------------------------------------------------------
+
+def test_encode_cache_stats_mapping_protocol():
+    stats = block.ENCODE_CACHE_STATS
+    stats.update(hits=0, misses=0, device_hits=0, device_misses=0)
+    assert stats == {"hits": 0, "misses": 0, "device_hits": 0,
+                     "device_misses": 0}
+    stats["hits"] = 3
+    assert stats["hits"] == 3
+    assert {**stats}["hits"] == 3
+    assert len(stats) == 4 and set(stats) == set(stats._KEYS)
+    with pytest.raises(KeyError):
+        stats["nope"]
+    with pytest.raises(KeyError):
+        stats["nope"] = 1
+    with pytest.raises(TypeError):
+        del stats["hits"]
+    # the shim is a live view over the registry counter, not a copy
+    metrics.counter("comefa.encode_cache").inc(event="hits")
+    assert stats["hits"] == 4
+
+
+def test_two_independent_sessions_see_identical_stats():
+    """The regression the registry fixes: session 2 must not inherit
+    session 1's counts (module-level dict leakage across tests)."""
+    def session():
+        metrics.reset()
+        block._ENCODE_CACHE.clear()
+        arr = ComefaArray(n_blocks=1)
+        a = np.arange(160).reshape(1, 160) % (1 << BITS)
+        layout.place(arr, a, 0, BITS)
+        layout.place(arr, a, BITS, BITS)
+        arr.run(_mul_prog())
+        arr.run(_mul_prog())           # structurally equal rebuild: hit
+        layout.extract(arr, 2 * BITS, 2 * BITS)
+        return dict(block.ENCODE_CACHE_STATS), arr.host_syncs
+
+    first, syncs1 = session()
+    second, syncs2 = session()
+    assert first == second
+    assert first["misses"] == 1 and first["hits"] == 1
+    assert syncs1 == syncs2
+
+
+# ---------------------------------------------------------------------------
+# array/grid counter parity
+# ---------------------------------------------------------------------------
+
+def test_host_sync_device_put_registry_parity():
+    arr = ComefaArray(n_blocks=1)
+    a = np.arange(160).reshape(1, 160) % (1 << BITS)
+    layout.place(arr, a, 0, BITS)
+    layout.place(arr, a, BITS, BITS)
+    arr.run(_mul_prog())
+    layout.extract(arr, 2 * BITS, 2 * BITS)
+
+    grid = ComefaGrid(2, n_blocks=1)
+    for g in range(2):
+        layout.place(grid.slot(g), a, 0, BITS)
+        layout.place(grid.slot(g), a, BITS, BITS)
+    grid.run(_mul_prog())
+    layout.extract(grid.slot(0), 2 * BITS, 2 * BITS)
+
+    syncs = metrics.counter("comefa.host_syncs")
+    puts = metrics.counter("comefa.device_puts")
+    assert syncs.value(kind="array") == arr.host_syncs > 0
+    assert puts.value(kind="array") == arr.device_puts > 0
+    assert syncs.value(kind="grid") == grid.host_syncs > 0
+    assert puts.value(kind="grid") == grid.device_puts > 0
+    # dispatches carry {kind, engine} labels whatever engine is active
+    disp = metrics.counter("comefa.dispatches").series()
+    kinds = {dict(k).get("kind") for k in disp}
+    assert {"array", "grid"} <= kinds
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_emits_nothing():
+    assert not trace.enabled()
+    s = trace.span("x", a=1)
+    assert s is trace.NULL_SPAN
+    assert trace.span("y") is s        # one shared no-op instance
+    with s as sp:
+        sp.set(b=2)
+    trace.model_span("m", 0, 10)
+    assert len(trace.get_tracer()) == 0
+
+
+def test_span_nesting_under_exception():
+    trace.configure(enabled=True)
+    with pytest.raises(ValueError):
+        with trace.span("outer", depth=0):
+            with trace.span("inner"):
+                raise ValueError("boom")
+    evs = trace.get_tracer().events()
+    names = [e.name for e in evs]
+    assert names == ["inner", "outer"]  # inner closes first: nesting holds
+    assert all(e.attrs.get("error") == "ValueError" for e in evs)
+    assert all(e.dur >= 0 for e in evs)
+
+
+def test_span_set_attaches_attrs():
+    trace.configure(enabled=True)
+    with trace.span("run", program="mul") as sp:
+        sp.set(cycles=42)
+    ev = trace.get_tracer().events()[-1]
+    assert ev.attrs == {"program": "mul", "cycles": 42}
+
+
+def test_ring_buffer_bounds_memory():
+    trace.configure(enabled=True, capacity=8)
+    for i in range(20):
+        with trace.span(f"s{i}"):
+            pass
+    tracer = trace.get_tracer()
+    assert len(tracer) == 8 == tracer.capacity
+    assert [e.name for e in tracer.events()] == \
+        [f"s{i}" for i in range(12, 20)]
+    trace.configure(capacity=trace.DEFAULT_CAPACITY)
+
+
+def test_schedule_emit_trace_model_spans():
+    trace.configure(enabled=True)
+    sched = schedule.Schedule([(10, 30, 5), (10, 30, 5)], name="t")
+    n = sched.emit_trace(track=3)
+    assert n == 6
+    evs = [e for e in trace.get_tracer().events()
+           if e.track == trace.MODEL_TRACK]
+    assert len(evs) == 6
+    assert all(e.tid == 3 for e in evs)
+    # tile 1's load overlaps tile 0's compute: the LCU pipeline shows
+    by = {(e.attrs["tile"], e.attrs["phase"]): e for e in evs}
+    assert by[(1, "load")].ts < by[(0, "compute")].ts \
+        + by[(0, "compute")].dur
+    trace.configure(enabled=False)
+    assert sched.emit_trace() == 0             # disabled -> no-op
+
+
+# ---------------------------------------------------------------------------
+# Chrome export
+# ---------------------------------------------------------------------------
+
+def test_chrome_export_round_trips(tmp_path):
+    trace.configure(enabled=True)
+    with trace.span("encode", program="mul8"):
+        pass
+    trace.model_span("tile/load", 0, 100, track_id=1, tile=0)
+    path = tmp_path / "trace.json"
+    export.write_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    ms = [e for e in evs if e["ph"] == "M"]
+    assert {e["pid"] for e in xs} == {export.WALL_PID, export.MODEL_PID}
+    for e in xs:
+        assert isinstance(e["ts"], float) and e["ts"] >= 0
+        assert isinstance(e["dur"], float) and e["dur"] >= 0
+        assert e["name"]
+    wall = next(e for e in xs if e["pid"] == export.WALL_PID)
+    assert wall["args"]["program"] == "mul8"
+    model = next(e for e in xs if e["pid"] == export.MODEL_PID)
+    assert model["ts"] == 0.0 and model["dur"] == 100.0
+    assert model["tid"] == 1
+    proc_names = {e["pid"]: e["args"]["name"] for e in ms
+                  if e["name"] == "process_name"}
+    assert proc_names[export.WALL_PID] == "wall-clock"
+    assert "modeled-cycles" in proc_names[export.MODEL_PID]
+
+
+def test_metrics_summary_derived_rates():
+    c = metrics.counter("comefa.encode_cache")
+    c.inc(3, event="hits")
+    c.inc(1, event="misses")
+    metrics.counter("comefa.host_syncs").inc(2, kind="array")
+    summary = export.metrics_summary()
+    assert summary["derived"]["encode_cache_hit_rate"] == 0.75
+    assert summary["derived"]["host_syncs_total"] == 2
+    assert summary["counters"]["comefa.encode_cache{event=hits}"] == 3
+
+
+# ---------------------------------------------------------------------------
+# the REPRO_COMEFA_TRACE end-to-end smoke (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_env_var_traced_sweep_produces_valid_trace(tmp_path, monkeypatch):
+    """`REPRO_COMEFA_TRACE=...` + a run_per_slot GEMV sweep must yield a
+    non-empty Chrome trace carrying BOTH time domains: wall-clock spans
+    (encode / dispatch / host sync) and the per-tile load/compute/unload
+    model-cycle spans of every slot's schedule."""
+    from repro.kernels import comefa_sim
+
+    path = tmp_path / "comefa-trace.json"
+    monkeypatch.setenv(trace.ENV_VAR, str(path))
+    assert trace.configure_from_env()
+    trace.get_tracer().clear()
+
+    rng = np.random.default_rng(7)
+    g, k, n, wb, xb = 2, 4, 8, 3, 4
+    w = rng.integers(0, 1 << wb, size=(g, k, n))
+    x = rng.integers(0, 1 << xb, size=(g, k))
+    y = comefa_sim.comefa_gemv_batched(w, x, w_bits=wb, x_bits=xb,
+                                       acc_bits=16, recode="naive")
+    assert np.array_equal(y, np.einsum("gkn,gk->gn", w, x))
+
+    assert trace.flush() == str(path)
+    doc = json.loads(path.read_text())
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert xs, "traced sweep produced an empty trace"
+    wall = {e["name"] for e in xs if e["pid"] == export.WALL_PID}
+    assert "comefa.encode" in wall
+    assert "grid.run_per_slot" in wall
+    assert "grid.host_sync" in wall
+    model = [e for e in xs if e["pid"] == export.MODEL_PID]
+    assert {e["args"]["phase"] for e in model} == \
+        {"load", "compute", "unload"}
+    assert {e["tid"] for e in model} == set(range(g))  # one track/slot
