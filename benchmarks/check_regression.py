@@ -51,6 +51,50 @@ def check_trace_overhead(payload: dict, max_frac: float) -> list:
     return failures
 
 
+def check_serve(current: dict, baseline: dict, occupancy_min: float,
+                tolerance: float) -> list:
+    """Gate the continuous-batching serving rows.
+
+    Two different gates, matching what each row means:
+
+      * ``serve/grid_occupancy`` is an absolute floor on the *current*
+        run (the admission queue must keep grid slots >= occupancy_min
+        busy under staggered request lengths - a scheduling property,
+        not a machine-speed one, so no baseline is involved);
+      * ``serve/decode_tok_s`` is throughput - HIGHER is better, so it
+        regresses when the current rate drops more than ``tolerance``
+        below the committed baseline (the inverse of the wall-clock
+        gate in `check`).
+
+    Rows missing from either side are reported but never fail, like the
+    wall-clock gate.
+    """
+    failures = []
+    cur = {r["name"]: r["derived"] for r in current["rows"]}
+    base = {r["name"]: r["derived"] for r in baseline["rows"]}
+    name = "serve/grid_occupancy"
+    if name not in cur:
+        print(f"  note: {name} missing from current run (not gated)")
+    else:
+        occ = cur[name]
+        status = "TOO LOW  " if occ < occupancy_min else "ok"
+        print(f"  {status:9s} {name}: {occ:.1%} (min {occupancy_min:.0%})")
+        if occ < occupancy_min:
+            failures.append((name, occ))
+    name = "serve/decode_tok_s"
+    if name not in cur or name not in base:
+        side = "baseline" if name not in base else "current run"
+        print(f"  note: {name} missing from {side} (not gated)")
+    else:
+        ratio = cur[name] / base[name]
+        status = "REGRESSED" if ratio < 1 - tolerance else "ok"
+        print(f"  {status:9s} {name}: {base[name]:.2f} -> {cur[name]:.2f} "
+              f"tok/s ({ratio:.2f}x)")
+        if ratio < 1 - tolerance:
+            failures.append((name, ratio))
+    return failures
+
+
 def check(current: dict, baseline: dict, pattern: str,
           tolerance: float) -> list:
     """Return the list of (name, base_us, cur_us, ratio) regressions."""
@@ -83,6 +127,8 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-overhead-max", type=float, default=0.02,
                     help="max tracing-disabled overhead fraction of a "
                          "dispatch (0.02 = 2%%)")
+    ap.add_argument("--serve-occupancy-min", type=float, default=0.9,
+                    help="continuous-batching grid occupancy floor")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
@@ -93,13 +139,18 @@ def main(argv=None) -> int:
     regressions = check(current, baseline, args.pattern, args.tolerance)
     print("gating tracing-disabled overhead:")
     overhead = check_trace_overhead(current, args.trace_overhead_max)
-    if regressions or overhead:
+    print("gating serving rows:")
+    serve = check_serve(current, baseline, args.serve_occupancy_min,
+                        args.tolerance)
+    if regressions or overhead or serve:
         if regressions:
             print(f"FAIL: {len(regressions)} row(s) regressed beyond "
                   f"+{args.tolerance:.0%}")
         if overhead:
             print(f"FAIL: {len(overhead)} tracing-overhead row(s) above "
                   f"{args.trace_overhead_max:.0%}")
+        if serve:
+            print(f"FAIL: {len(serve)} serving row(s) out of bounds")
         return 1
     print("all gated rows within tolerance")
     return 0

@@ -275,6 +275,51 @@ def run(rows: list) -> None:
     rows.append(("sim/fir_per_sample_cycles_generic_mac", 0.0,
                  timing.mac_cycles(16, 36) / 2, None))
 
+    # serving on the grid: continuous-batched decode with every packed
+    # projection executed on the bit-level ComefaGrid simulator.  Six
+    # staggered-length requests over 2 slots keep the admission queue
+    # non-empty until the drain, so grid occupancy stays >= 90% - the
+    # check_regression gate pins both the occupancy floor and tokens/sec.
+    import dataclasses as _dc
+
+    from repro import configs as _cfgs
+    from repro.core.fpga_model import perf as _perf
+    from repro.models import common as _cm, lm as _lm
+    from repro.serve import engine as _engine
+    from repro.serve.comefa_exec import GridLinearExecutor
+
+    scfg = _dc.replace(
+        _cm.reduced(_cfgs.get("smollm-360m"), vocab=64, n_layers=1,
+                    d_model=32, d_ff=64, n_heads=2, kv_heads=2,
+                    head_dim=16, dtype="float32"),
+        quant_bits=8)
+    sparams = _lm.init(jax.random.PRNGKey(0), scfg)
+    sreqs = [_engine.Request(np.arange(1, 2 + i % 3), 2 + (i * 2) % 5)
+             for i in range(6)]
+    sstats: dict = {}
+    sexec = GridLinearExecutor(slots=2, backend="grid")
+    _engine.serve_continuous(sparams, sreqs, scfg, slots=2, max_len=12,
+                             executor=sexec, stats=sstats)     # warmup/encode
+    sstats.clear()
+    sexec2 = GridLinearExecutor(slots=2, backend="grid")
+    t0 = time.perf_counter()
+    souts = _engine.serve_continuous(sparams, sreqs, scfg, slots=2,
+                                     max_len=12, executor=sexec2,
+                                     stats=sstats)
+    serve_s = time.perf_counter() - t0
+    n_tokens = sum(len(o) for o in souts)
+    rows.append(("serve/decode_tok_s", serve_s / n_tokens * 1e6,
+                 n_tokens / serve_s, None))
+    rows.append(("serve/grid_occupancy", 0.0, sstats["occupancy"], None))
+    rows.append(("serve/grid_cycles_per_token", 0.0,
+                 sexec2.grid_cycles / n_tokens, None))
+    # modelled serving roofline: decode tokens/sec-per-mm^2 density gain
+    # of the augmented chip over the DSP baseline (perf.serve_roofline)
+    sroof = _perf.serve_roofline()
+    for var in ("comefa-d", "comefa-a"):
+        rows.append((f"serve/roofline_density_gain_{var}", 0.0,
+                     sroof[var]["gain"], None))
+
     # tiled GEMM: LCU-overlapped vs serial-phase schedules (cycles), plus
     # the sim-backed comefa_gemm wall-clock for the same shape
     from repro.kernels import comefa_sim

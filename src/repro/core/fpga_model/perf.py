@@ -365,6 +365,68 @@ def reduction(variant: str, bits: int = 4, n_blocks: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# serving roofline: decode tokens/sec per mm^2 (the serving-gap pricing)
+# ---------------------------------------------------------------------------
+
+def serve_roofline(w_bits: int = 8, x_bits: int = 8, d_model: int = 4096,
+                   d_ff: int = 0, n_layers: int = 32,
+                   recode: str = "naive") -> Dict[str, Dict[str, float]]:
+    """Decode-step tokens/sec-per-mm^2: CoMeFa variants vs DSP baseline.
+
+    Prices exactly the work `serve.comefa_exec.GridLinearExecutor` routes
+    to the grid: per decode token, every layer's seven projections
+    (attention wq/wk/wv/wo square in d_model, ffn wi/wg/wo against d_ff,
+    default 4*d_model) as w_bits x x_bits GEMVs.  The CoMeFa side is
+    priced from the *real* `comefa.schedule.GemvPlan` steady state
+    (``_gemv_scheduled_macs_per_lane_cycle`` - the same schedules the
+    bit-level simulator executes) with the accumulator width the serving
+    executor actually allocates (`serve.comefa_exec.acc_bits_for`);
+    CoMeFa-A, lacking OOOR streaming, pays the closed-form bit-serial MAC
+    cycles instead.  Silicon cost uses Table IV: the augmented chip is
+    ``chip_area_um2() * (1 + CHIP_OVERHEAD_FRAC[variant])``, the baseline
+    the unmodified chip, so the per-mm^2 ratio answers whether the added
+    compute pays for its area on the decode workload.
+
+    Returns ``{design: {tok_s, area_mm2, tok_s_per_mm2, gain}}`` where
+    ``gain`` is tok_s_per_mm2 relative to the DSP baseline.
+    """
+    from ..comefa.isa import ceil_log2
+    from . import area
+
+    d_ff = d_ff or 4 * d_model
+    # 4 attention + 3 gated-ffn projections per layer, one token
+    macs_per_token = n_layers * (4 * d_model * d_model + 3 * d_model * d_ff)
+    acc_bits = w_bits + x_bits + ceil_log2(max(2, d_model))
+    base_rate = dsp_mac_throughput("int8") + lb_mac_throughput("int8")
+    base_area_mm2 = area.chip_area_um2() / 1e6
+
+    out: Dict[str, Dict[str, float]] = {}
+    base_tok_s = base_rate / macs_per_token
+    base_density = base_tok_s / base_area_mm2
+    out["dsp-baseline"] = {"tok_s": base_tok_s, "area_mm2": base_area_mm2,
+                           "tok_s_per_mm2": base_density, "gain": 1.0}
+    for variant in ("comefa-d", "comefa-a"):
+        v = R.VARIANTS[variant]
+        if v.supports_ooor:
+            per_lane = _gemv_scheduled_macs_per_lane_cycle(
+                w_bits, x_bits, acc_bits, recode=recode)
+            ram_rate = (R.BRAMS * v.lanes * per_lane * v.freq
+                        / v.logic_cycle_factor)
+        else:
+            cyc = timing.mac_cycles(w_bits, acc_bits)
+            ram_rate = (R.BRAMS * v.lanes * v.freq
+                        / (cyc * v.logic_cycle_factor))
+        ram_rate *= _eff("gemv", variant)
+        tok_s = (base_rate + ram_rate) / macs_per_token
+        area_mm2 = base_area_mm2 * (1.0 + area.CHIP_OVERHEAD_FRAC[variant])
+        density = tok_s / area_mm2
+        out[variant] = {"tok_s": tok_s, "area_mm2": area_mm2,
+                        "tok_s_per_mm2": density,
+                        "gain": density / base_density}
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Fig 11: co-mapping sweep - fraction of work on CoMeFa RAMs
 # ---------------------------------------------------------------------------
 

@@ -221,23 +221,28 @@ def decode_step(params: Params, x: jax.Array, cache: Dict[str, jax.Array],
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode: x [B, 1, D], cache k/v [B, T, Hkv, D].
 
-    `index` is the absolute position of the new token; local layers write
-    the ring slot index % window.  Attention runs over the full cache with
-    validity masking - on a sharded cache T-axis each shard computes its
-    partial softmax and XLA combines (flash-decoding when shard_mapped).
+    `index` is the absolute position of the new token - a scalar (whole
+    batch in lockstep) or a [B] vector (continuous batching: each batch
+    row at its own sequence position).  Local layers write the ring slot
+    index % window.  Attention runs over the full cache with validity
+    masking - on a sharded cache T-axis each shard computes its partial
+    softmax and XLA combines (flash-decoding when shard_mapped).
     """
     b = x.shape[0]
     t = cache["k"].shape[1]
-    positions = jnp.full((b, 1), index, jnp.int32)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+    positions = idx[:, None]
     q, k_new, v_new = _qkv(params, x, cfg, positions)
-    slot = index % t if kind == "local" else index
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(
-        cache["k"].dtype), (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(
-        cache["v"].dtype), (0, slot, 0, 0))
-    # validity: slots beyond `index` are empty (ring slots wrap for local)
+    slot = idx % t if kind == "local" else idx
+    # per-row scatter: row i writes its own cache slot (reduces to the old
+    # whole-slab dynamic_update_slice when `index` is a lockstep scalar)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    # validity: slots beyond each row's index are empty (ring slots wrap
+    # for local)
     j = jnp.arange(t)[None, None, :]
-    valid = (j <= index) | jnp.zeros((b, 1, t), bool)
+    valid = j <= idx[:, None, None]
     out = _sdpa(q, k, v, valid, cfg)
     out = cm.linear(params["wo"], out.reshape(b, 1, -1), cfg)
     return out, {"k": k, "v": v}

@@ -131,6 +131,26 @@ def _dense_specs(in_axis: Optional[str], out_axis: Optional[str],
     return {"w": (in_axis, out_axis)}
 
 
+# Host-side interceptor for packed-projection contractions.  The serving
+# layer installs an executor here to route eager decode-step GEMVs onto the
+# CoMeFa grid; traced (jitted) calls never see it - the hook only fires on
+# concrete values.  Signature: hook(params, x2 [rows, K], bits) -> [rows, N]
+# array, or None to fall through to the XLA/Pallas path.
+_LINEAR_HOOK = None
+
+
+def set_linear_hook(hook):
+    """Install (or clear, with None) the packed-linear hook.
+
+    Returns the previous hook so callers can restore it in a finally
+    block - the serving engine scopes the executor to one generate call.
+    """
+    global _LINEAR_HOOK
+    prev = _LINEAR_HOOK
+    _LINEAR_HOOK = hook
+    return prev
+
+
 def linear(params: Params, x: jax.Array, cfg: Config) -> jax.Array:
     """y = x @ W with optional bit-plane packed weights (CoMeFa path)."""
     if "w" in params:
@@ -139,6 +159,10 @@ def linear(params: Params, x: jax.Array, cfg: Config) -> jax.Array:
     bits = packed.shape[0]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    if _LINEAR_HOOK is not None and not isinstance(x, jax.core.Tracer):
+        y = _LINEAR_HOOK(params, x2, bits)
+        if y is not None:
+            return y.reshape(*lead, -1).astype(x.dtype)
     if cfg.quant_mode == "pallas" and jax.default_backend() == "tpu":
         y = kops.bitplane_matmul(x2.astype(jnp.float32), packed, scale,
                                  bits=bits)

@@ -60,17 +60,18 @@ def pack(q: jax.Array, bits: int, axis: int = 0) -> jax.Array:
     k = q.shape[axis]
     assert k % LANES == 0, f"packed axis {k} must be divisible by {LANES}"
     u = q.astype(jnp.uint32)
+    # the lane-weight vector is bit-index-independent: build it once
+    weights = (jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32))
+    wshape = [1] * (u.ndim + 1)
+    wshape[axis + 1] = LANES
+    weights = weights.reshape(wshape)
     planes = []
     for i in range(bits):
         bit = (u >> i) & 1                                    # [..., K, ...]
         shp = list(bit.shape)
         shp[axis:axis + 1] = [k // LANES, LANES]
         b = bit.reshape(shp)
-        weights = (jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32))
-        wshape = [1] * b.ndim
-        wshape[axis + 1] = LANES
-        word = jnp.sum(b * weights.reshape(wshape), axis=axis + 1,
-                       dtype=jnp.uint32)
+        word = jnp.sum(b * weights, axis=axis + 1, dtype=jnp.uint32)
         planes.append(word)
     return jnp.stack(planes, axis=0)
 

@@ -45,6 +45,26 @@ def test_pack_unpack_property(bits, seed):
     np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
 
 
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_pack_unpack_full_signed_range_inner_axis(bits):
+    """Regression: pack() on axis != 0 over the FULL signed range.
+
+    Every representable value appears - including the asymmetric minimum
+    -2^(b-1), whose two's-complement pattern exercises the MSB plane -
+    packed along an inner axis, where the hoisted lane-weight vector must
+    broadcast against the leading axes rather than align by position.
+    """
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    vals = np.arange(lo, hi + 1, dtype=np.int32)
+    # width: every value at least once, padded to a multiple of 32 lanes
+    q = np.tile(vals, (3, max(1, 32 // len(vals))))
+    assert q.shape[1] % 32 == 0
+    assert q.min() == lo and q.max() == hi
+    packed = bp.pack(jnp.asarray(q), bits, axis=1)
+    back = bp.unpack(packed, bits, axis=1)
+    np.testing.assert_array_equal(np.asarray(back), q)
+
+
 def test_quantize_bounds_and_scale():
     w = jnp.asarray(RNG.normal(size=(64, 32)) * 3, jnp.float32)
     for bits in (2, 4, 8):

@@ -339,3 +339,43 @@ def test_env_var_traced_sweep_produces_valid_trace(tmp_path, monkeypatch):
     assert {e["args"]["phase"] for e in model} == \
         {"load", "compute", "unload"}
     assert {e["tid"] for e in model} == set(range(g))  # one track/slot
+
+
+# ---------------------------------------------------------------------------
+# serving span coverage: the prime loop attributes every token position
+# ---------------------------------------------------------------------------
+
+def test_generate_prime_emits_per_token_spans():
+    """The prompt-replay loop must emit one bounded child span per token
+    position (only when tracing is on - disabled runs share NULL_SPAN),
+    so a trace attributes host-sync time to individual prime steps."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import common, lm
+    from repro.serve import engine
+
+    cfg = common.reduced(configs.get("smollm-360m"), vocab=32, n_layers=1,
+                         d_model=32, d_ff=64, n_heads=2, kv_heads=2,
+                         head_dim=16, dtype="float32")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+
+    # disabled: the loop allocates nothing (shared no-op span)
+    assert not trace.enabled()
+    engine.generate(params, prompt, cfg, steps=1, max_len=8)
+    assert len(trace.get_tracer()) == 0
+
+    trace.configure(enabled=True)
+    engine.generate(params, prompt, cfg, steps=2, max_len=8)
+    names = [e.name for e in trace.get_tracer().events()]
+    assert names.count("serve.prime_token") == prompt.shape[1]
+    assert names.count("serve.prime") == 1
+    assert names.count("serve.decode_step") == 2
+    steps = [e.attrs["step"] for e in trace.get_tracer().events()
+             if e.name == "serve.prime_token"]
+    assert steps == list(range(prompt.shape[1]))
+    # children close before the parent: every prime_token precedes prime
+    assert max(i for i, n in enumerate(names)
+               if n == "serve.prime_token") < names.index("serve.prime")

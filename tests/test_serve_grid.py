@@ -1,0 +1,236 @@
+"""Serving on the CoMeFa grid: routed decode projections + continuous batching.
+
+The tentpole claim is *priced AND executed*: with an installed
+`GridLinearExecutor`, every packed decode-step projection runs on the
+bit-level `ComefaGrid` simulator, and its logits are **bit-exact** against
+the int-quantized reference (`backend="reference"` swaps only the integer
+GEMV for an int64 einsum - all quantize/offset/correction/dequantize code
+is shared, so any grid-side bit slip fails `array_equal`, not `allclose`).
+
+Also covered here:
+  * wave batching when the request batch under-/over-fills the grid;
+  * `serve_continuous` - admission/retirement keeps per-request tokens
+    identical to running each request alone (serialized slots=1 oracle),
+    and executorless continuous decode matches lockstep `generate`
+    (pinning the vector-index KV-cache scatter against the scalar path);
+  * the empty-prompt `ValueError` (regression: used to crash in `sample`);
+  * per-slot recode dispatch bit-exactness;
+  * `perf.serve_roofline` sanity (tokens/sec-per-mm^2 orderings).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.fpga_model import perf
+from repro.models import common, lm
+from repro.obs import metrics
+from repro.quant import bitplane
+from repro.serve import engine
+from repro.serve.comefa_exec import GridLinearExecutor, acc_bits_for
+
+
+def _grid_dispatches() -> float:
+    """Total grid dispatches across engines (the packed tier-1 CI leg
+    runs with REPRO_COMEFA_ENGINE=packed, changing the engine label)."""
+    c = metrics.counter("comefa.dispatches")
+    return sum(v for labels, v in c.series().items()
+               if ("kind", "grid") in labels)
+
+
+def tiny_cfg(quant_bits=8, **over):
+    cfg = common.reduced(configs.get("smollm-360m"), vocab=64, n_layers=1,
+                         d_model=32, d_ff=64, n_heads=2, kv_heads=2,
+                         head_dim=16, dtype="float32")
+    return dataclasses.replace(cfg, quant_bits=quant_bits, **over)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: grid-executed projections bit-exact vs int-quantized reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant_bits,batch,slots", [(8, 3, 2), (4, 1, 2)])
+def test_generate_on_grid_bitexact_vs_reference(quant_bits, batch, slots):
+    """Every projection of a decode sweep, grid vs reference, array_equal.
+
+    The probe runs BOTH backends on each hooked call and compares the
+    float32 outputs exactly - on real decode activations, not synthetic
+    vectors.  (8, 3, 2) over-fills the grid (two waves per call);
+    (4, 1, 2) under-fills it (one partial wave).
+    """
+    cfg = tiny_cfg(quant_bits)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray(np.arange(2 * batch).reshape(batch, 2) % cfg.vocab,
+                         jnp.int32)
+    grid_ex = GridLinearExecutor(slots=slots, backend="grid")
+    ref_ex = GridLinearExecutor(slots=slots, backend="reference")
+    calls = {"n": 0}
+
+    def probe(p, x2, bits):
+        yg = grid_ex(p, x2, bits)
+        yr = ref_ex(p, x2, bits)
+        np.testing.assert_array_equal(np.asarray(yg), np.asarray(yr))
+        calls["n"] += 1
+        return yg
+
+    before = _grid_dispatches()
+    out = engine.generate(params, prompt, cfg, steps=2, max_len=8,
+                          executor=probe)
+    assert out.shape == (batch, 2)
+    # 7 projections/layer/token (wq wk wv wo + wi wg wo), 2 prompt + 2 gen
+    assert calls["n"] == 7 * cfg.n_layers * 4
+    # acceptance: the sweep actually dispatched grid programs
+    assert _grid_dispatches() - before > 0
+    assert grid_ex.grid_cycles > 0
+    # wave accounting matches the batch/grid geometry
+    waves_per_call = -(-batch // slots)
+    assert grid_ex.slot_steps == batch * calls["n"]
+    assert grid_ex.slot_capacity == waves_per_call * slots * calls["n"]
+
+
+def test_wave_split_invariance():
+    """Grid width must not change the math: slots=2 vs slots=8 tokens equal."""
+    cfg = tiny_cfg(8)
+    params = lm.init(jax.random.PRNGKey(1), cfg)
+    prompt = jnp.asarray(np.arange(10).reshape(5, 2), jnp.int32)
+    outs = [engine.generate(params, prompt, cfg, steps=2, max_len=8,
+                            executor=GridLinearExecutor(
+                                slots=s, backend="reference"))
+            for s in (2, 8)]
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+def test_per_slot_recode_dispatch_bitexact():
+    """recode="naive" routes through ComefaGrid.run_per_slot, still exact."""
+    cfg = tiny_cfg(4)
+    k, n = cfg.d_model, cfg.n_heads * cfg.hd
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n), jnp.float32)
+    packed, scale = bitplane.quantize_pack(w, cfg.quant_bits, axis=0)
+    params = {"packed": packed, "scale": scale}
+    x2 = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(3), (2, k), jnp.float32))
+    y_slot = GridLinearExecutor(slots=2, x_bits=4, recode="naive",
+                                backend="grid")(params, x2, cfg.quant_bits)
+    y_ref = GridLinearExecutor(slots=2, x_bits=4,
+                               backend="reference")(params, x2,
+                                                    cfg.quant_bits)
+    np.testing.assert_array_equal(np.asarray(y_slot), np.asarray(y_ref))
+
+
+def test_acc_bits_cover_worst_case():
+    for w_bits, x_bits, k in [(4, 4, 32), (8, 8, 32), (8, 4, 1024), (2, 2, 2)]:
+        bound = ((2 ** w_bits - 1) * (2 ** x_bits - 1)) * k
+        assert bound < 2 ** acc_bits_for(w_bits, x_bits, k)
+
+
+# ---------------------------------------------------------------------------
+# satellite: empty prompt is a clear error, not a crash in sample()
+# ---------------------------------------------------------------------------
+
+def test_generate_empty_prompt_raises():
+    cfg = tiny_cfg(None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    empty = jnp.zeros((2, 0), jnp.int32)
+    with pytest.raises(ValueError, match="non-empty prompt"):
+        engine.generate(params, empty, cfg, steps=2, max_len=8)
+
+
+def test_serve_continuous_empty_prompt_raises():
+    cfg = tiny_cfg(None)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.serve_continuous(params, [engine.Request(np.array([], int), 2)],
+                                cfg, slots=2, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.serve_continuous(params, [engine.Request(np.array([1]), 99)],
+                                cfg, slots=2, max_len=8)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_generate_greedy():
+    """One request, executorless: the vector-index decode path must emit
+    the same greedy tokens as lockstep `generate` (same cache contents)."""
+    cfg = tiny_cfg(None)
+    params = lm.init(jax.random.PRNGKey(4), cfg)
+    prompt = np.array([5, 9, 13])
+    ref = engine.generate(params, jnp.asarray(prompt)[None], cfg,
+                          steps=4, max_len=12)
+    out = engine.serve_continuous(params, [engine.Request(prompt, 4)], cfg,
+                                  slots=2, max_len=12)
+    np.testing.assert_array_equal(np.asarray(ref)[0], out[0])
+
+
+def test_continuous_batching_equals_serialized():
+    """Property: requests retiring at different lengths produce exactly the
+    tokens they'd produce running alone.  slots=1 serializes the same
+    request list (same request ids -> same sampling keys), slots=3
+    interleaves them with admission/retirement; outputs must match even
+    at temperature > 0."""
+    cfg = tiny_cfg(8)
+    params = lm.init(jax.random.PRNGKey(5), cfg)
+    reqs = [engine.Request(np.array([3, 4, 5]), 4),
+            engine.Request(np.array([7]), 2),
+            engine.Request(np.array([9, 2]), 6),
+            engine.Request(np.array([1, 1, 1, 1]), 3)]
+    key = jax.random.PRNGKey(42)
+    kw = dict(max_len=16, temperature=0.7, key=key)
+    stats = {}
+    batched = engine.serve_continuous(
+        params, reqs, cfg, slots=3, stats=stats,
+        executor=GridLinearExecutor(slots=3, backend="reference"), **kw)
+    alone = engine.serve_continuous(
+        params, reqs, cfg, slots=1,
+        executor=GridLinearExecutor(slots=1, backend="reference"), **kw)
+    for b, a, r in zip(batched, alone, reqs):
+        assert len(b) == r.steps
+        np.testing.assert_array_equal(b, a)
+    # interleaving must actually have happened: fewer dispatches than the
+    # serialized total, with occupancy accounted
+    total = sum(len(r.prompt) + r.steps - 1 for r in reqs)
+    assert stats["slot_steps"] == total
+    assert stats["steps"] < total
+    assert 0.0 < stats["occupancy"] <= 1.0
+
+
+def test_continuous_metrics_and_occupancy():
+    cfg = tiny_cfg(None)
+    params = lm.init(jax.random.PRNGKey(6), cfg)
+    done = metrics.counter("serve.requests_completed")
+    before = done.value()
+    stats = {}
+    # 6 staggered requests over 2 slots: the queue keeps slots busy
+    reqs = [engine.Request(np.array([i + 1]), 2 + i % 3) for i in range(6)]
+    outs = engine.serve_continuous(params, reqs, cfg, slots=2, max_len=8,
+                                   stats=stats)
+    assert len(outs) == 6 and all(len(o) == r.steps
+                                  for o, r in zip(outs, reqs))
+    assert done.value() - before == 6
+    assert stats["occupancy"] >= 0.9
+    assert metrics.gauge("serve.queue_depth").value() == 0
+
+
+# ---------------------------------------------------------------------------
+# serve_roofline: tokens/sec-per-mm^2 pricing
+# ---------------------------------------------------------------------------
+
+def test_serve_roofline_orderings():
+    r = perf.serve_roofline()
+    assert set(r) == {"dsp-baseline", "comefa-d", "comefa-a"}
+    base = r["dsp-baseline"]
+    assert base["gain"] == 1.0
+    for v in ("comefa-d", "comefa-a"):
+        # added compute beats its area cost on the decode workload
+        assert r[v]["tok_s"] > base["tok_s"]
+        assert r[v]["area_mm2"] > base["area_mm2"]
+        assert r[v]["gain"] > 1.0
+    # OOOR streaming at 2x frequency: -D leads -A in density
+    assert r["comefa-d"]["tok_s_per_mm2"] > r["comefa-a"]["tok_s_per_mm2"]
+    # narrower operands raise MACs/cycle -> density gain grows
+    r4 = perf.serve_roofline(w_bits=4, x_bits=4)
+    assert r4["comefa-d"]["gain"] > r["comefa-d"]["gain"]
