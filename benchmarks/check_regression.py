@@ -81,17 +81,61 @@ def check_serve(current: dict, baseline: dict, occupancy_min: float,
         print(f"  {status:9s} {name}: {occ:.1%} (min {occupancy_min:.0%})")
         if occ < occupancy_min:
             failures.append((name, occ))
-    name = "serve/decode_tok_s"
-    if name not in cur or name not in base:
-        side = "baseline" if name not in base else "current run"
-        print(f"  note: {name} missing from {side} (not gated)")
-    else:
+    for name in ("serve/decode_tok_s", "serve/decode_tok_s_auto"):
+        if name not in cur or name not in base:
+            side = "baseline" if name not in base else "current run"
+            print(f"  note: {name} missing from {side} (not gated)")
+            continue
         ratio = cur[name] / base[name]
         status = "REGRESSED" if ratio < 1 - tolerance else "ok"
         print(f"  {status:9s} {name}: {base[name]:.2f} -> {cur[name]:.2f} "
               f"tok/s ({ratio:.2f}x)")
         if ratio < 1 - tolerance:
             failures.append((name, ratio))
+    return failures
+
+
+def check_auto_recode(current: dict, ratio_min: float) -> list:
+    """Gate the adaptive recode selector's win, absolute (no baseline).
+
+    Two facts, both deterministic modeled-cycle comparisons on the
+    current run alone:
+
+      * ``gemv/auto_vs_best_fixed_ratio_*`` = best-fixed cycles / auto
+        cycles must stay >= ``ratio_min`` (auto may never model-cost
+        meaningfully more than the best fixed global recode, on sparse
+        AND dense activation streams);
+      * ``serve/grid_cycles_per_token_auto`` must stay strictly below
+        every fixed ``serve/grid_cycles_per_token_{naive,booth,naf}``
+        row - the mixed-sweep win that motivates "auto" existing at all.
+    """
+    failures = []
+    cur = {r["name"]: r["derived"] for r in current["rows"]}
+    for name in sorted(cur):
+        if not name.startswith("gemv/auto_vs_best_fixed_ratio_"):
+            continue
+        ratio = cur[name]
+        status = "TOO LOW  " if ratio < ratio_min else "ok"
+        print(f"  {status:9s} {name}: {ratio:.3f}x best fixed "
+              f"(min {ratio_min:.2f})")
+        if ratio < ratio_min:
+            failures.append((name, ratio))
+    auto = cur.get("serve/grid_cycles_per_token_auto")
+    if auto is None:
+        print("  note: serve/grid_cycles_per_token_auto missing "
+              "(not gated)")
+        return failures
+    for rc in ("naive", "booth", "naf"):
+        name = f"serve/grid_cycles_per_token_{rc}"
+        if name not in cur:
+            print(f"  note: {name} missing from current run (not gated)")
+            continue
+        beaten = auto < cur[name]
+        status = "ok" if beaten else "NOT BEATEN"
+        print(f"  {status:9s} {name}: fixed {cur[name]:.0f} vs auto "
+              f"{auto:.0f} cycles/token")
+        if not beaten:
+            failures.append((name, cur[name]))
     return failures
 
 
@@ -129,6 +173,9 @@ def main(argv=None) -> int:
                          "dispatch (0.02 = 2%%)")
     ap.add_argument("--serve-occupancy-min", type=float, default=0.9,
                     help="continuous-batching grid occupancy floor")
+    ap.add_argument("--auto-ratio-min", type=float, default=0.98,
+                    help="min best-fixed/auto modeled-cycle ratio for "
+                         "the adaptive recode selector")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
@@ -142,7 +189,9 @@ def main(argv=None) -> int:
     print("gating serving rows:")
     serve = check_serve(current, baseline, args.serve_occupancy_min,
                         args.tolerance)
-    if regressions or overhead or serve:
+    print("gating adaptive recode selection:")
+    auto = check_auto_recode(current, args.auto_ratio_min)
+    if regressions or overhead or serve or auto:
         if regressions:
             print(f"FAIL: {len(regressions)} row(s) regressed beyond "
                   f"+{args.tolerance:.0%}")
@@ -151,6 +200,9 @@ def main(argv=None) -> int:
                   f"{args.trace_overhead_max:.0%}")
         if serve:
             print(f"FAIL: {len(serve)} serving row(s) out of bounds")
+        if auto:
+            print(f"FAIL: {len(auto)} adaptive-recode row(s) out of "
+                  f"bounds")
         return 1
     print("all gated rows within tolerance")
     return 0

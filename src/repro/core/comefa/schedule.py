@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ...obs import metrics as obs_metrics
 from ...obs import trace as obs_trace
 from . import ir, layout, program, timing
 from .ir import Operand, Program, RowAllocator
@@ -217,6 +218,17 @@ class GemmTile:
 # shape-keyed cache of tile compute programs (two per plan shape - one per
 # double-buffer slot; the row map is deterministic in (bits, steps, slot))
 _TILE_PROGRAMS: Dict[Tuple, Program] = {}
+
+# digit-stream-keyed cache of *specialized* (and optimized) GEMV chunk
+# programs: decode sweeps re-stream the same small activation chunks
+# constantly (zeros and tiny values dominate), and the digit stream is a
+# pure function of (values, recode), so the concrete expansion - and its
+# pass-pipeline output - can be reused verbatim.  FIFO-bounded like the
+# kernel-layer FIR cache; hit/miss counts land in the `repro.obs`
+# registry (surfaced as a derived rate by `obs.export.metrics_summary`).
+_SPEC_PROGRAMS: Dict[Tuple, Program] = {}
+_SPEC_PROGRAMS_MAX = 4096
+_SPEC_CACHE = obs_metrics.counter("comefa.spec_cache")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -498,14 +510,41 @@ class GemvPlan:
         shared symbolic template: only *nonzero digits* of each recoded
         activation cost adds (the zero-bit skipping of Sec. III-I;
         ``recode`` in {"naive", "booth", "naf"} picks the digit set -
-        signed modes need a plan built with ``reserve_neg=True``).
+        signed modes need a plan built with ``reserve_neg=True`` - and
+        ``"auto"`` lets `recode.select_chunk` pick the cheapest legal
+        schedule for this chunk's exact digit statistics).
+
+        Specialized programs are cached on their digit stream: the
+        template's shape key plus ``(recode, values)``, which the digits
+        are a pure function of.  Repeated activation chunks - the common
+        decode case - skip both re-specialization and the pass pipeline.
         """
         assert len(x_chunk) == tile.n_elems
-        prog = ir.specialize_streams(self.symbolic_chunk_program(tile),
-                                     [int(v) for v in x_chunk],
-                                     recode=recode)
-        prog.name = f"gemv_chunk{tile.index}@{recode}"
-        return prog.optimize() if optimized else prog
+        values = tuple(int(v) for v in x_chunk)
+        if recode == "auto":
+            from . import recode as recode_mod   # deferred: imports us
+            recode = recode_mod.select_chunk(values, self, tile).recode
+        if not isinstance(recode, str):          # custom recoder callable
+            prog = ir.specialize_streams(self.symbolic_chunk_program(tile),
+                                         list(values), recode=recode)
+            return prog.optimize() if optimized else prog
+        key = ("gemv_spec", self.w_bits, self.x_bits, self.acc_bits,
+               self.k_tile, tile.n_elems, tile.buffer, tile.index == 0,
+               self.neg is not None, optimized, recode, values)
+        prog = _SPEC_PROGRAMS.get(key)
+        if prog is None:
+            _SPEC_CACHE.inc(event="misses")
+            prog = ir.specialize_streams(self.symbolic_chunk_program(tile),
+                                         list(values), recode=recode)
+            prog.name = f"gemv_chunk{tile.index}@{recode}"
+            if optimized:
+                prog = prog.optimize()
+            if len(_SPEC_PROGRAMS) >= _SPEC_PROGRAMS_MAX:
+                _SPEC_PROGRAMS.pop(next(iter(_SPEC_PROGRAMS)))  # FIFO
+            _SPEC_PROGRAMS[key] = prog
+        else:
+            _SPEC_CACHE.inc(event="hits")
+        return prog
 
     def schedule(self, x: Sequence[int], optimized: bool = True,
                  recode: str = "naive") -> Schedule:
@@ -569,3 +608,36 @@ def plan_gemv(k: int, n: int, w_bits: int, x_bits: int,
     return GemvPlan(k=k, n=n, w_bits=w_bits, x_bits=x_bits,
                     acc_bits=acc_bits, n_blocks=n_blocks, k_tile=k_tile,
                     n_tiles=n_tiles, buffers=buffers, acc=acc, neg=neg)
+
+
+# shape-keyed memoized GEMV plans: a decode sweep re-plans the identical
+# projection geometry on every wave of every token; `GemvPlan` is a frozen
+# dataclass the kernels use read-only, so one instance per shape is safe
+# to share.  Bounded FIFO (shape diversity is tiny in practice); hit/miss
+# counts land in the `repro.obs` registry.
+_PLAN_CACHE: Dict[Tuple, GemvPlan] = {}
+_PLAN_CACHE_MAX = 256
+_PLAN_STATS = obs_metrics.counter("comefa.plan_cache")
+
+
+def cached_plan_gemv(k: int, n: int, w_bits: int, x_bits: int,
+                     acc_bits: int = 32, k_tile: Optional[int] = None,
+                     reserve_neg: bool = False) -> GemvPlan:
+    """Memoizing front end to `plan_gemv` (same arguments and errors).
+
+    The returned plan is shared across callers - treat it as immutable
+    (it already is: a frozen dataclass whose operands are fixed row
+    ranges).
+    """
+    key = (k, n, w_bits, x_bits, acc_bits, k_tile, reserve_neg)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _PLAN_STATS.inc(event="misses")
+        plan = plan_gemv(k, n, w_bits, x_bits, acc_bits=acc_bits,
+                         k_tile=k_tile, reserve_neg=reserve_neg)
+        if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))     # FIFO
+        _PLAN_CACHE[key] = plan
+    else:
+        _PLAN_STATS.inc(event="hits")
+    return plan

@@ -148,6 +148,57 @@ def zero_skip_speedup(n_bits: int, recode: str = "naive") -> float:
     return n_bits / expected_nonzero_digits(n_bits, recode)
 
 
+def digit_patterns(values, n_bits: int, recode: str = "naive"):
+    """Per-value nonzero/negative digit bitmasks of a recoded stream.
+
+    Returns ``(nonzero, negative)`` int64 arrays: bit ``i`` of
+    ``nonzero[j]`` is set iff digit ``i`` of ``values[j]``'s recoding is
+    nonzero, ``negative`` likewise for digits below zero.  Closed forms -
+    naive is the value itself; Booth radix-2 boundaries are
+    ``x ^ (x << 1)`` with negatives at the 0->1 rising edges
+    ``x & ~(x << 1)``; NAF uses the canonical ``3x`` construction
+    (``(x ^ 3x) >> 1`` nonzero, ``(x & ~3x) >> 1`` negative).  Asserted
+    digit-for-digit against `ir.recode_digits` in tests; this is what
+    lets `recode.chunk_stream_cycles` price a whole activation chunk
+    without expanding a single program.
+    """
+    import numpy as np
+    x = np.asarray(values, dtype=np.int64).ravel()
+    assert n_bits >= 1
+    assert ((x >= 0) & (x < (1 << n_bits))).all(), \
+        f"values outside [0, 2^{n_bits})"
+    if recode == "naive":
+        return x, np.zeros_like(x)
+    if recode == "booth":
+        return x ^ (x << 1), x & ~(x << 1)
+    if recode == "naf":
+        h = 3 * x
+        return (x ^ h) >> 1, (x & ~h) >> 1
+    raise ValueError(f"unknown recode mode {recode!r}")
+
+
+def nonzero_digit_counts(values, n_bits: int, recode: str = "naive"):
+    """Vectorized exact nonzero-digit counts of a recoded value chunk.
+
+    The per-value companion of `expected_nonzero_digits`: the length of
+    each value's OOOR digit stream (= streamed adds it costs), exact
+    rather than in expectation.  Signed recodings (Booth/NAF) may emit a
+    digit at offset ``n_bits``; the count includes it.
+    """
+    import numpy as np
+    nz, _ = digit_patterns(values, n_bits, recode)
+    counts = np.zeros_like(nz)
+    for i in range(n_bits + 1):
+        counts += (nz >> i) & 1
+    return counts
+
+
+def nonzero_digit_count(value: int, n_bits: int,
+                        recode: str = "naive") -> int:
+    """Exact nonzero digits of ONE recoded value (its OOOR stream length)."""
+    return int(nonzero_digit_counts([value], n_bits, recode)[0])
+
+
 def streamed_mac_cycles(w_bits: int, acc_bits: int, x: int, x_bits: int,
                         recode: str = "naive") -> int:
     """Exact cycles of one specialized streamed MAC (``acc += w * x``).

@@ -29,6 +29,7 @@ import numpy as np
 from ..core.comefa import (ComefaArray, ComefaGrid, N_COLS, layout, program,
                            schedule)
 from ..core.comefa import ir as ir_mod
+from ..core.comefa import recode as recode_mod
 from ..core.comefa.ir import Program, RowAllocator
 from ..core.comefa.isa import (Instr, N_ROWS, PRED_MASK, RESERVED_ROWS,
                                TT_COPY_A, USABLE_ROWS, ceil_log2)
@@ -110,16 +111,20 @@ def comefa_gemv(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     `ir.specialize_streams` (the FSM inspecting the outside operand -
     Sec. III-I): ``recode`` picks the digit schedule - ``"naive"``
     zero-skips binary bits, ``"booth"`` / ``"naf"`` stream signed digits
-    (the plan reserves a complement scratch region) - and the result is
-    bit-exact under every mode.  Partial sums accumulate in the shared
+    (the plan reserves a complement scratch region), ``"auto"`` lets
+    `core.comefa.recode.select_chunk` pick the cheapest schedule per
+    chunk from its exact digit statistics - and the result is bit-exact
+    under every mode.  Partial sums accumulate in the shared
     accumulator; all n outputs extract after the last chunk.
     """
     w = np.asarray(w)
     x = np.asarray(x).ravel()
     k, n = w.shape
     assert x.shape[0] == k
-    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits,
-                              reserve_neg=ir_mod.recode_is_signed(recode))
+    # "auto" may pick a signed schedule per chunk: plan for the worst case
+    reserve = recode == "auto" or ir_mod.recode_is_signed(recode)
+    plan = schedule.cached_plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                                     reserve_neg=reserve)
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
     arr = ComefaArray(n_blocks=nb, engine=engine)
@@ -422,6 +427,41 @@ def _gemv_batched_chunk_program(plan: schedule.GemvPlan,
     return _PROGRAMS[key][0]
 
 
+# per-shape cached broadcast quotes for the auto selector (the underlying
+# plan and chunk programs are themselves shape-cached; this just skips
+# re-walking the tiles per wave)
+_BCAST_QUOTES: Dict[Tuple, Optional[recode_mod.BroadcastQuote]] = {}
+
+
+def _broadcast_quote(k: int, n: int, w_bits: int, x_bits: int,
+                     acc_bits: int,
+                     optimized: bool) -> Optional[recode_mod.BroadcastQuote]:
+    """Price the shared-FSM broadcast alternative for the auto selector.
+
+    None when the shrunk broadcast chunk (`gemv_batched_k_tile`) has no
+    room at all; otherwise a `recode.BroadcastQuote` carrying the
+    broadcast-geometry plan and the actual mask-program length per tile
+    - the selector prices the x-row load traffic on top.
+    """
+    key = (k, n, w_bits, x_bits, acc_bits, optimized)
+    if key not in _BCAST_QUOTES:
+        k_tile = gemv_batched_k_tile(w_bits, x_bits, acc_bits)
+        if k_tile < 1:
+            _BCAST_QUOTES[key] = None
+        else:
+            plan = schedule.cached_plan_gemv(k, n, w_bits, x_bits,
+                                             acc_bits,
+                                             k_tile=min(k, k_tile))
+            x_rows = _gemv_batched_layout(plan)
+            comp = tuple(
+                _gemv_batched_chunk_program(plan, t, x_rows,
+                                            optimized).cycles
+                for t in plan.tiles())
+            _BCAST_QUOTES[key] = recode_mod.BroadcastQuote(
+                plan=plan, compute_cycles=comp)
+    return _BCAST_QUOTES[key]
+
+
 def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                         x_bits: int, acc_bits: int = 32,
                         optimized: bool = True, mesh=None,
@@ -448,25 +488,45 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
         together - the grid sweep regains the OOOR zero-skipping (and
         Booth/NAF recoding) the broadcast mode gave up, with per-slot
         cycle counts matching `comefa_gemv` for the same recode.
+      * ``recode="auto"`` (adaptive): `recode.select_wave` prices every
+        candidate - the broadcast mask program on its own shrunk
+        geometry, naive/Booth/NAF per slot - against the wave's *actual*
+        activation values and executes the cheapest pipelined makespan;
+        per-slot FSMs make mixed recodes across slots (and across
+        k-chunks) legal, so sparse and dense slots each get their
+        cheapest digit schedule.
 
     Bit-identical per slot to G separate `comefa_gemv` calls in every
     mode.  Pass `mesh` to shard the grid axis; a `stats` dict receives
     the grid's modelled compute ``cycles`` (the per-slot lockstep /
-    makespan count - how the benchmark rows compare the two modes).
-    The same count also lands in the ``comefa.kernel_cycles`` counter
-    (labels ``kernel="gemv_batched"``, ``mode``) of the
-    `repro.obs.metrics` registry - prefer that for new callers; the
-    ``stats`` side channel is kept for compatibility.
+    makespan count - how the benchmark rows compare the two modes) and
+    the executed ``mode`` ("broadcast" or "per_slot").  The same count
+    also lands in the ``comefa.kernel_cycles`` counter (labels
+    ``kernel="gemv_batched"``, ``mode``) of the `repro.obs.metrics`
+    registry - prefer that for new callers; the ``stats`` side channel
+    is kept for compatibility.
     """
     w = np.asarray(w)
     x = np.asarray(x)
     assert w.ndim == 3 and x.ndim == 2 and w.shape[0] == x.shape[0]
     assert w.shape[1] == x.shape[1]
     G, k, n = w.shape
+    choices = None
+    if recode == "auto":
+        plan_ps = schedule.cached_plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                                            reserve_neg=True)
+        sel = recode_mod.select_wave(
+            plan_ps, x, broadcast=_broadcast_quote(k, n, w_bits, x_bits,
+                                                   acc_bits, optimized))
+        if sel.mode == "broadcast":
+            recode = None            # the shared mask program won
+        else:
+            choices = sel.choices
     if recode is not None:
         return _comefa_gemv_per_slot(w, x, w_bits=w_bits, x_bits=x_bits,
                                      acc_bits=acc_bits, optimized=optimized,
-                                     mesh=mesh, recode=recode, stats=stats,
+                                     mesh=mesh, recode=recode,
+                                     choices=choices, stats=stats,
                                      engine=engine)
     k_tile = gemv_batched_k_tile(w_bits, x_bits, acc_bits)
     if k_tile < 1:
@@ -474,8 +534,8 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
             f"no room for a double-buffered {w_bits}-bit weight plus "
             f"{x_bits} broadcast x rows beside a {acc_bits}-bit "
             f"accumulator ({USABLE_ROWS} usable rows)")
-    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits,
-                              k_tile=min(k, k_tile))
+    plan = schedule.cached_plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                                     k_tile=min(k, k_tile))
     x_rows = _gemv_batched_layout(plan)
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
@@ -511,6 +571,7 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
             name=f"broadcast_g{G}/gemv_k{k}")
     if stats is not None:
         stats["cycles"] = grid.cycles
+        stats["mode"] = "broadcast"
     out = np.empty((G, n), dtype=np.int64)
     for g in range(G):
         vals = layout.extract(grid.slot(g), plan.acc.base, acc_bits)
@@ -520,7 +581,7 @@ def comefa_gemv_batched(w: np.ndarray, x: np.ndarray, *, w_bits: int,
 
 def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                           x_bits: int, acc_bits: int, optimized: bool,
-                          mesh, recode: str,
+                          mesh, recode: str, choices=None,
                           stats: Optional[Dict] = None,
                           engine=None) -> np.ndarray:
     """Per-slot-stream batched GEMV (`comefa_gemv_batched(recode=...)`).
@@ -528,11 +589,15 @@ def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
     Same `schedule.plan_gemv` geometry as the single-instance kernel (no
     broadcast x rows needed - activations live in the instruction
     streams), one shared symbolic chunk template, per-slot digit-stream
-    specialization, `run_per_slot` dispatch.
+    specialization, `run_per_slot` dispatch.  With ``choices`` (the
+    [slot][tile] winners from `recode.select_wave`) each slot's chunk
+    runs its own pre-selected digit schedule - mixed recodes across
+    slots are legal because every grid slice has its own FSM.
     """
     G, k, n = w.shape
-    plan = schedule.plan_gemv(k, n, w_bits, x_bits, acc_bits,
-                              reserve_neg=ir_mod.recode_is_signed(recode))
+    reserve = recode == "auto" or ir_mod.recode_is_signed(recode)
+    plan = schedule.cached_plan_gemv(k, n, w_bits, x_bits, acc_bits,
+                                     reserve_neg=reserve)
     nb, lanes = plan.n_blocks, N_COLS
     pad = nb * lanes - n
     grid = ComefaGrid(G, n_blocks=nb, mesh=mesh, engine=engine)
@@ -549,8 +614,11 @@ def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                     rows = buf.weight_rows(j_local, w_bits)
                     layout.place(slot, wj, rows.base, w_bits)
             progs = [
-                plan.tile_program(tile, x[g, tile.k_start:tile.k_end],
-                                  optimized=optimized, recode=recode)
+                plan.tile_program(
+                    tile, x[g, tile.k_start:tile.k_end],
+                    optimized=optimized,
+                    recode=(choices[g][tile.index].recode
+                            if choices is not None else recode))
                 for g in range(G)]
             grid.run_per_slot(progs)
             if obs_trace.enabled():
@@ -569,6 +637,7 @@ def _comefa_gemv_per_slot(w: np.ndarray, x: np.ndarray, *, w_bits: int,
                 track=g, name=f"slot{g}/gemv_k{k}")
     if stats is not None:
         stats["cycles"] = grid.cycles
+        stats["mode"] = "per_slot"
     out = np.empty((G, n), dtype=np.int64)
     for g in range(G):
         vals = layout.extract(grid.slot(g), plan.acc.base, acc_bits)

@@ -111,10 +111,12 @@ def metrics_summary(snapshot: Optional[Dict] = None) -> Dict:
 
     ``counters`` is the `metrics.flatten` view of the full snapshot;
     ``derived`` adds the rates dashboards actually chart: encode /
-    device-matrix cache hit rates and total host-boundary crossings.
+    device-matrix / specialization / plan cache hit rates, total
+    host-boundary crossings, and the adaptive recode selection
+    histogram (``{choice: count}`` of per-chunk winners).
     """
     snap = metrics_mod.snapshot() if snapshot is None else snapshot
-    derived: Dict[str, float] = {}
+    derived: Dict[str, object] = {}
     for rate, hit, miss in (
             ("encode_cache_hit_rate", "hits", "misses"),
             ("device_mat_cache_hit_rate", "device_hits", "device_misses")):
@@ -122,6 +124,16 @@ def metrics_summary(snapshot: Optional[Dict] = None) -> Dict:
         m = _series_total(snap, "comefa.encode_cache", event=miss)
         if h + m:
             derived[rate] = h / (h + m)
+    for rate, name in (("spec_cache_hit_rate", "comefa.spec_cache"),
+                       ("plan_cache_hit_rate", "comefa.plan_cache")):
+        h = _series_total(snap, name, event="hits")
+        m = _series_total(snap, name, event="misses")
+        if h + m:
+            derived[rate] = h / (h + m)
+    sel = snap.get("comefa.recode_selected")
+    if sel and sel["series"]:
+        derived["recode_selection"] = {
+            s["labels"].get("choice", ""): s["value"] for s in sel["series"]}
     for name in ("comefa.host_syncs", "comefa.device_puts",
                  "comefa.dispatches", "comefa.dispatch_cycles"):
         total = _series_total(snap, name)

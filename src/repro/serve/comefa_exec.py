@@ -30,10 +30,17 @@ int-quantized reference, which is what the tests pin.
 ``recode=None`` dispatches the value-independent broadcast program;
 ``"naive" | "booth" | "naf"`` uses `ComefaGrid.run_per_slot` per-slot
 digit-stream specialization (PR 5) - each slot's FSM streams its own
-recoded activation digits.
+recoded activation digits.  ``"auto"`` hands the choice to
+`core.comefa.recode.select_wave` per wave/slot/chunk: decode activations
+are offset-encoded around ``2^(x-1)``, so small ``|q_x|`` splits into
+one-digit values (``128``) and long carry runs (``127``) - exactly the
+mix where per-chunk selection beats any global knob.  The
+``REPRO_COMEFA_RECODE`` environment variable overrides the default for
+whole sweeps without touching call sites.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -47,6 +54,26 @@ from ..quant import bitplane
 
 _GRID_WAVES = obs_metrics.counter("serve.grid_waves")
 _GRID_OCCUPANCY = obs_metrics.gauge("serve.grid_occupancy")
+
+def _resolve_recode(recode):
+    """Apply the ``REPRO_COMEFA_RECODE`` override to the default recode.
+
+    An explicit constructor argument (including ``None``) always wins;
+    only the ``"env"`` sentinel default consults the environment.
+    ``none``/``broadcast`` map to the shared broadcast program, ``auto``
+    to per-wave adaptive selection, the rest to fixed per-slot digit
+    schedules; unset keeps the broadcast default.
+    """
+    if recode != "env":
+        return recode
+    val = os.environ.get("REPRO_COMEFA_RECODE", "").strip().lower()
+    if val in ("", "none", "broadcast"):
+        return None
+    if val in ("auto", "naive", "booth", "naf"):
+        return val
+    raise ValueError(
+        f"REPRO_COMEFA_RECODE={val!r}: expected one of "
+        f"none|broadcast|auto|naive|booth|naf")
 
 
 def acc_bits_for(w_bits: int, x_bits: int, k: int) -> int:
@@ -70,8 +97,12 @@ class GridLinearExecutor:
     slots: grid width G - decode requests per dispatch wave.
     x_bits: activation quantization width (weights carry their own width
         in ``packed.shape[0]``).
-    recode: None for the shared broadcast program, or "naive"/"booth"/
-        "naf" for per-slot digit-stream specialization.
+    recode: None for the shared broadcast program, "naive"/"booth"/
+        "naf" for a fixed per-slot digit-stream specialization, or
+        "auto" for per-wave/per-slot/per-chunk adaptive selection
+        (`core.comefa.recode`).  The default ``"env"`` sentinel reads
+        the ``REPRO_COMEFA_RECODE`` environment override (falling back
+        to the broadcast program when unset).
     backend: "grid" executes on the bit-level simulator; "reference"
         swaps ONLY the integer GEMV for an int64 einsum (the bit-exact
         oracle the tests compare against).
@@ -79,12 +110,12 @@ class GridLinearExecutor:
     """
 
     def __init__(self, slots: int = 4, x_bits: int = 8,
-                 recode: Optional[str] = None, backend: str = "grid",
+                 recode: Optional[str] = "env", backend: str = "grid",
                  engine=None):
         assert backend in ("grid", "reference"), backend
         self.slots = slots
         self.x_bits = x_bits
-        self.recode = recode
+        self.recode = _resolve_recode(recode)
         self.backend = backend
         self.engine = engine
         # continuous batching: bool [rows] marking live requests; None

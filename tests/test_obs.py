@@ -303,6 +303,50 @@ def test_metrics_summary_derived_rates():
     assert summary["counters"]["comefa.encode_cache{event=hits}"] == 3
 
 
+def test_metrics_summary_recode_and_cache_derived():
+    """spec/plan cache hit rates + the recode selection histogram round-
+    trip through the summary (and are absent when never bumped)."""
+    empty = export.metrics_summary()
+    for key in ("spec_cache_hit_rate", "plan_cache_hit_rate",
+                "recode_selection"):
+        assert key not in empty["derived"]
+    sc = metrics.counter("comefa.spec_cache")
+    sc.inc(6, event="hits")
+    sc.inc(2, event="misses")
+    pc = metrics.counter("comefa.plan_cache")
+    pc.inc(1, event="hits")
+    pc.inc(3, event="misses")
+    sel = metrics.counter("comefa.recode_selected")
+    sel.inc(5, choice="naive")
+    sel.inc(2, choice="naf")
+    sel.inc(4, choice="broadcast")
+    summary = export.metrics_summary()
+    assert summary["derived"]["spec_cache_hit_rate"] == 0.75
+    assert summary["derived"]["plan_cache_hit_rate"] == 0.25
+    assert summary["derived"]["recode_selection"] == {
+        "naive": 5, "naf": 2, "broadcast": 4}
+    assert summary["counters"]["comefa.recode_selected{choice=naf}"] == 2
+    # the summary block must stay JSON-serializable for the nightly file
+    json.loads(json.dumps(summary["derived"]))
+
+
+def test_metrics_summary_selection_visible_after_auto_gemv():
+    """An actual recode="auto" dispatch leaves its decisions readable in
+    the summary - the 'counters visible' half of the acceptance bar."""
+    from repro.kernels import comefa_sim
+
+    rng = np.random.default_rng(3)
+    g, k, n, wb, xb = 2, 6, 8, 3, 4
+    w = rng.integers(0, 1 << wb, size=(g, k, n))
+    x = rng.integers(0, 1 << xb, size=(g, k))
+    comefa_sim.comefa_gemv_batched(w, x, w_bits=wb, x_bits=xb,
+                                   acc_bits=14, recode="auto")
+    summary = export.metrics_summary()
+    hist = summary["derived"]["recode_selection"]
+    assert sum(hist.values()) > 0
+    assert set(hist) <= {"naive", "booth", "naf", "broadcast"}
+
+
 # ---------------------------------------------------------------------------
 # the REPRO_COMEFA_TRACE end-to-end smoke (tier-1)
 # ---------------------------------------------------------------------------

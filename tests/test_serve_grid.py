@@ -120,6 +120,43 @@ def test_per_slot_recode_dispatch_bitexact():
     np.testing.assert_array_equal(np.asarray(y_slot), np.asarray(y_ref))
 
 
+def test_auto_recode_dispatch_bitexact():
+    """recode="auto" (adaptive per-wave/per-slot selection) stays exact
+    on real decode activations and records its selections."""
+    cfg = tiny_cfg(4)
+    k, n = cfg.d_model, cfg.n_heads * cfg.hd
+    w = jax.random.normal(jax.random.PRNGKey(4), (k, n), jnp.float32)
+    packed, scale = bitplane.quantize_pack(w, cfg.quant_bits, axis=0)
+    params = {"packed": packed, "scale": scale}
+    x2 = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(5), (3, k), jnp.float32))
+    y_auto = GridLinearExecutor(slots=2, x_bits=4, recode="auto",
+                                backend="grid")(params, x2, cfg.quant_bits)
+    y_ref = GridLinearExecutor(slots=2, x_bits=4,
+                               backend="reference")(params, x2,
+                                                    cfg.quant_bits)
+    np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_ref))
+    sel = metrics.counter("comefa.recode_selected")
+    assert sum(v for _, v in sel.series().items()) > 0
+
+
+def test_recode_env_override(monkeypatch):
+    """REPRO_COMEFA_RECODE drives the default; explicit args bypass it;
+    bogus values fail fast with the allowed spellings in the message."""
+    monkeypatch.delenv("REPRO_COMEFA_RECODE", raising=False)
+    assert GridLinearExecutor().recode is None
+    for val, want in (("auto", "auto"), ("naf", "naf"), ("none", None),
+                      ("broadcast", None), ("", None), ("Booth", "booth")):
+        monkeypatch.setenv("REPRO_COMEFA_RECODE", val)
+        assert GridLinearExecutor().recode == want, val
+    monkeypatch.setenv("REPRO_COMEFA_RECODE", "auto")
+    assert GridLinearExecutor(recode="naive").recode == "naive"
+    assert GridLinearExecutor(recode=None).recode is None
+    monkeypatch.setenv("REPRO_COMEFA_RECODE", "radix4")
+    with pytest.raises(ValueError, match="REPRO_COMEFA_RECODE"):
+        GridLinearExecutor()
+
+
 def test_acc_bits_cover_worst_case():
     for w_bits, x_bits, k in [(4, 4, 32), (8, 8, 32), (8, 4, 1024), (2, 2, 2)]:
         bound = ((2 ** w_bits - 1) * (2 ** x_bits - 1)) * k

@@ -225,6 +225,29 @@ def test_expected_nonzero_digits_is_exact_enumeration(n, rc):
     assert timing.expected_nonzero_digits(n, rc) == pytest.approx(mean)
 
 
+def test_expected_nonzero_digits_tiny_width_pins():
+    """Hand-computed n=1 and n=2 values, per recoding - the degenerate
+    widths where the closed forms are easiest to get subtly wrong.
+
+    n=1: values {0, 1} -> naive mean 1/2; NAF of 1 is the single digit 1
+    (mean 1/2); radix-2 Booth recodes 1 as (+1@0, -1@1) - two digits -
+    so its mean is 1.0, the documented (n+1)/2 uniform average.
+    n=2: naive popcounts {0,1,1,2} mean 1; NAF weights {0,1,1,2} mean 1
+    (3 = +4-1 keeps weight 2); Booth digit counts {0,2,2,2} mean 3/2.
+    """
+    assert timing.expected_nonzero_digits(1, "naive") == 0.5
+    assert timing.expected_nonzero_digits(1, "booth") == 1.0
+    assert timing.expected_nonzero_digits(1, "naf") == 0.5
+    assert timing.expected_nonzero_digits(2, "naive") == 1.0
+    assert timing.expected_nonzero_digits(2, "booth") == 1.5
+    assert timing.expected_nonzero_digits(2, "naf") == 1.0
+    # and the vectorized per-value counts average to exactly these
+    for n in (1, 2):
+        for rc in RECODES:
+            counts = timing.nonzero_digit_counts(np.arange(1 << n), n, rc)
+            assert counts.mean() == timing.expected_nonzero_digits(n, rc)
+
+
 def test_digit_densities_and_speedups():
     # naive density is exactly n/2 -> the paper's reported ~2x OOOR factor
     assert timing.zero_skip_speedup(8, "naive") == 2.0
